@@ -1,0 +1,30 @@
+"""Paper §III "Communication Improvement": one-shot clustering bytes vs a
+weight-exchange iterative clustering round, for both paper models and a
+transformer arch — the clustering cost is model-size independent, the
+iterative baseline is not."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.configs.base import get_arch
+from repro.core.oneshot import CommLedger
+
+
+def run() -> list[str]:
+    rows = []
+    scenarios = [
+        ("paper_mlp_10users", 10, 784, 5, 784 * 32 + 32 + 32 * 10 + 10),
+        ("paper_cnn_10users", 10, 256, 8,
+         5 * 5 * 3 * 6 + 6 + 5 * 5 * 6 * 16 + 16 + 400 * 120 + 120
+         + 120 * 84 + 84 + 84 * 10 + 10),
+        ("qwen3_1p7b_64users", 64, 128, 8,
+         get_arch("qwen3_1_7b").n_params()),
+    ]
+    for name, n, d, k, params in scenarios:
+        led = CommLedger(n_users=n, d=d, top_k=k, model_params=params)
+        s = led.summary()
+        rows.append(common.row(
+            f"comm_{name}", 0.0,
+            oneshot_upload_bytes=s["per_user_upload_bytes"],
+            iterative_round_bytes=s["iterative_per_round_upload_bytes"],
+            ratio=round(s["oneshot_vs_iterative_ratio"], 6)))
+    return rows

@@ -1,0 +1,52 @@
+"""One-shot vs IFCA-style iterative clustering (literature baseline [5]):
+clustering accuracy per round and communication accounting.
+
+The paper's argument: iterative weight-based clustering needs several
+rounds (early weights are uninformative) and each round moves full model
+parameters per user; the one-shot protocol decides BEFORE training for a
+few kB.  This bench quantifies both on the FMNIST three-task layout.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import clustering as clu
+from repro.core import oneshot
+from repro.core.similarity import SimilarityConfig
+from repro.data import partition as dpart
+from repro.fed import client as fclient
+from repro.fed.ifca import IFCAConfig, run_ifca
+from repro.models import mlp
+
+
+def run(rounds=4) -> list[str]:
+    users = dpart.paper_fmnist_three_task(seed=0, scale=0.15)
+    true = [u.task_id for u in users]
+
+    res_os = oneshot.one_shot_clustering([u.x for u in users], 3,
+                                         cfg=SimilarityConfig(top_k=8))
+    acc_os = clu.clustering_accuracy(res_os.labels, true)
+    led = res_os.ledger
+    oneshot_bytes = led.per_user_upload + led.per_user_download
+
+    mcfg = mlp.PaperMLPConfig(m=784, n_classes=10)
+    cfg = IFCAConfig(n_clusters=3, rounds=rounds, local_steps=10,
+                     client=fclient.ClientConfig(lr=0.05,
+                                                 optimizer="momentum"))
+    res_it = run_ifca(users, lambda k: mlp.init(mcfg, k),
+                      mlp.loss_fn(mcfg), lambda u: u.y.astype(np.int32),
+                      cfg)
+    rows = [common.row(
+        "ifca_vs_oneshot", 0.0,
+        oneshot_accuracy=acc_os,
+        oneshot_total_bytes=oneshot_bytes,
+        ifca_bytes_per_round=res_it.per_user_bytes_per_round,
+        comm_ratio_one_round=round(
+            res_it.per_user_bytes_per_round / oneshot_bytes, 1))]
+    for r in range(rounds):
+        rows.append(common.row(
+            f"ifca_round{r}", 0.0,
+            clustering_accuracy=clu.clustering_accuracy(
+                res_it.assignments[r], true)))
+    return rows

@@ -1,0 +1,46 @@
+"""Kernel micro-benchmarks: jnp reference wall time on CPU (the Pallas
+kernels target TPU and are validated in interpret mode by the test suite;
+interpret-mode wall time is not meaningful, so we time the reference path
+and report the kernels' validation status + arithmetic intensity)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels.eigproject import ops as proj_ops
+from repro.kernels.eigproject.ref import project_norms_ref
+from repro.kernels.gram import ops as gram_ops
+from repro.kernels.gram.ref import gram_ref
+
+
+def run() -> list[str]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    n, d = 2048, 256
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    ref_us = common.time_us(lambda: gram_ref(x).block_until_ready())
+    pall = gram_ops.gram_matrix(x, interpret=True)
+    ok = bool(np.allclose(np.asarray(pall), np.asarray(gram_ref(x)),
+                          rtol=1e-3, atol=1e-2))
+    flops = 2 * n * d * d
+    rows.append(common.row(
+        "kernel_gram_2048x256", ref_us, ref_gflops=round(
+            flops / ref_us / 1e3, 2), pallas_validates=ok,
+        arithmetic_intensity=round(flops / (4 * (n * d + d * d)), 1)))
+
+    d, k = 256, 128
+    g = jnp.asarray(rng.standard_normal((d, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((d, k)), jnp.float32)
+    ref_us = common.time_us(
+        lambda: project_norms_ref(g, v).block_until_ready())
+    pall = proj_ops.project_norms(g, v, interpret=True)
+    ok = bool(np.allclose(np.asarray(pall),
+                          np.asarray(project_norms_ref(g, v)),
+                          rtol=1e-3, atol=1e-2))
+    rows.append(common.row(
+        "kernel_eigproject_256x128", ref_us, pallas_validates=ok,
+        fusion_saving_bytes=4 * d * k))  # the G@V intermediate never hits HBM
+    return rows

@@ -1,0 +1,57 @@
+"""Beyond-paper: robustness of the clustering to noisy shared eigenvectors
+(the paper's §IV future-work item) and to Nystrom row-subsampling.
+
+Sweeps the eigenvector noise sigma (DP-style perturbation of the ONLY
+shared artifact) and the Gram subsample size, reporting clustering
+accuracy on the FMNIST three-task layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import clustering as clu
+from repro.core import similarity as sim
+from repro.data import partition as dpart
+
+
+def _cluster_with_noise(feats, true, sigma: float, top_k: int = 8) -> float:
+    counts = [f.shape[0] for f in feats]
+    n_max = max(counts)
+    d = feats[0].shape[1]
+    padded = np.zeros((len(feats), n_max, d), np.float32)
+    for i, f in enumerate(feats):
+        padded[i, : f.shape[0]] = f
+    grams = sim.batched_gram(jnp.asarray(padded),
+                             jnp.asarray(counts, jnp.float32))
+    lam, v = jax.vmap(lambda g: sim.spectrum(g, top_k))(grams)
+    if sigma > 0:
+        v = sim.perturb_eigenvectors(v, sigma, jax.random.PRNGKey(17))
+    r = sim.relevance_matrix(grams, lam, v)
+    big_r = np.asarray(sim.symmetrize(r))
+    labels = clu.hac_clusters(big_r, len(set(true)))
+    return clu.clustering_accuracy(labels, true)
+
+
+def run(sigmas=(0.0, 0.01, 0.05, 0.1, 0.3, 1.0),
+        subsamples=(64, 128, 256, 0)) -> list[str]:
+    users = dpart.paper_fmnist_three_task(seed=0, scale=0.25)
+    feats = [u.x for u in users]
+    true = [u.task_id for u in users]
+    rows = []
+    for s in sigmas:
+        acc = _cluster_with_noise(feats, true, s)
+        rows.append(common.row(f"robust_noise_sigma{s}", 0.0,
+                               clustering_accuracy=acc))
+    for m in subsamples:
+        sub = [sim.subsample_rows(f, m, seed=3) if m else f for f in feats]
+        acc = _cluster_with_noise(sub, true, 0.0)
+        rows.append(common.row(
+            f"robust_subsample_{m or 'full'}", 0.0,
+            clustering_accuracy=acc,
+            gram_cost_rel=round((min(m, feats[0].shape[0]) if m
+                                 else feats[0].shape[0])
+                                / feats[0].shape[0], 3)))
+    return rows

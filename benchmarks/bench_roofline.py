@@ -1,0 +1,42 @@
+"""Roofline table (deliverable g): reads the dry-run artifacts written by
+``repro.launch.dryrun`` and emits one row per (arch x shape x mesh) with
+the three roofline terms, the dominant bottleneck, and the useful-FLOPs
+ratio.  Rows are omitted (with a notice) if the sweep has not produced the
+artifact yet."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks import common
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def run() -> list[str]:
+    rows = []
+    files = sorted(DRYRUN_DIR.glob("*.json")) if DRYRUN_DIR.exists() else []
+    if not files:
+        return [common.row("roofline_no_artifacts", 0.0,
+                           note="run repro.launch.dryrun first")]
+    n_ok = n_fail = 0
+    for f in files:
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            n_fail += 1
+            rows.append(common.row(f"roofline_{f.stem}", 0.0, status="FAIL",
+                                   error=r.get("error", "?")[:80]))
+            continue
+        n_ok += 1
+        roof = r["roofline"]
+        rows.append(common.row(
+            f"roofline_{f.stem}", 0.0,
+            compute_s=round(roof["compute_term_s"], 5),
+            memory_s=round(roof["memory_term_s"], 5),
+            collective_s=round(roof["collective_term_s"], 5),
+            bottleneck=roof["bottleneck"],
+            useful_flops_ratio=round(roof["useful_flops_ratio"], 3),
+            hbm_gb=round(r["memory"].get("total_hbm_bytes", 0) / 2 ** 30, 2),
+            compile_s=r.get("compile_s")))
+    rows.append(common.row("roofline_summary", 0.0, ok=n_ok, fail=n_fail))
+    return rows

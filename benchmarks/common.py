@@ -1,0 +1,107 @@
+"""Shared benchmark helpers: timing + the MT-HFL comparison harness used by
+the Fig. 2 / Fig. 3 reproductions."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clustering as clu
+from repro.core import oneshot
+from repro.core.similarity import SimilarityConfig
+from repro.data import partition as dpart
+from repro.data import synthetic as syn
+from repro.fed import client as fclient
+from repro.fed import partition as fpart
+from repro.fed import trainer as ftrainer
+
+
+def time_us(fn: Callable, n_iter: int = 5, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        fn()
+    return (time.perf_counter() - t0) / n_iter * 1e6
+
+
+def row(name: str, us: float, **derived) -> str:
+    kv = ";".join(f"{k}={v}" for k, v in derived.items())
+    return f"{name},{us:.1f},{kv}"
+
+
+def mthfl_compare(users, tasks: dict, model_builder: Callable,
+                  eval_spec, n_clusters: int, seeds: Sequence[int],
+                  cfg: ftrainer.MTHFLConfig,
+                  feature_fn: Callable | None = None,
+                  top_k: int = 8):
+    """Run proposed (one-shot similarity) vs random clustering over seeds.
+
+    Returns dict with per-method mean/std of final per-cluster accuracy,
+    plus the clustering accuracy of the proposed method.
+    """
+    feats = [feature_fn(u.x) if feature_fn else u.x for u in users]
+    res = oneshot.one_shot_clustering(feats, n_clusters,
+                                      cfg=SimilarityConfig(top_k=top_k))
+    true = [u.task_id for u in users]
+    clu_acc = clu.clustering_accuracy(res.labels, true)
+
+    def run(labels, seed):
+        cc = []
+        for t in range(n_clusters):
+            members = [u for u, l in zip(users, labels) if l == t]
+            counts = {}
+            for u in members:
+                key = tuple(u.task_classes)
+                counts[key] = counts.get(key, 0) + 1
+            cc.append(list(max(counts, key=counts.get)) if counts
+                      else list(list(tasks.values())[t]))
+        models = [model_builder(c) for c in cc]
+        evals = [eval_spec(c, tasks) for c in cc]
+        run_cfg = ftrainer.MTHFLConfig(
+            global_rounds=cfg.global_rounds, local_rounds=cfg.local_rounds,
+            local_steps=cfg.local_steps, batch_size=cfg.batch_size,
+            client=cfg.client, seed=seed)
+        hist = ftrainer.train_mthfl(users, labels, models, evals, run_cfg,
+                                    cluster_classes=cc)
+        return hist.accuracy[-1]
+
+    proposed, random_base = [], []
+    sizes = np.bincount(res.labels, minlength=n_clusters)
+    import jax
+
+    for seed in seeds:
+        proposed.append(run(res.labels, seed))
+        rand = clu.random_clusters(len(users), n_clusters, rng=seed,
+                                   cluster_sizes=list(sizes))
+        random_base.append(run(rand, seed))
+        # Every run creates fresh jit closures (new loss_fn per cluster);
+        # XLA's CPU JIT intermittently fails ("Failed to materialize
+        # symbols") once too many compiled dylibs accumulate — drop them
+        # between seeds.
+        jax.clear_caches()
+    proposed = np.stack(proposed)
+    random_base = np.stack(random_base)
+    return {
+        "clustering_accuracy": clu_acc,
+        "proposed_mean": proposed.mean(),
+        "proposed_std": proposed.std(),
+        "proposed_per_task": proposed.mean(0),
+        "random_mean": random_base.mean(),
+        "random_std": random_base.std(),
+        "random_per_task": random_base.mean(0),
+    }
+
+
+def make_eval_spec(spec: syn.SyntheticImageSpec, n: int = 60, seed: int = 999):
+    def eval_spec(classes, tasks):
+        task_id = [k for k, v in tasks.items() if set(v) == set(classes)]
+        tid = task_id[0] if task_id else 0
+        x, y = syn.make_task_dataset(spec, list(classes), n, seed=seed,
+                                     task_of_class={c: tid for c in classes})
+        lut = {c: i for i, c in enumerate(classes)}
+        return (jnp.asarray(x),
+                np.asarray([lut[int(v)] for v in y], np.int32))
+    return eval_spec

@@ -1,0 +1,81 @@
+"""Benchmark harness — one benchmark per paper table/figure (+ comm, IFCA
+baseline, robustness, kernels, and the roofline table from the dry-run
+artifacts).
+
+Prints ``name,us_per_call,derived`` CSV.  ``--only <prefix>`` filters;
+``--seeds N`` widens the MT-HFL comparisons (paper used 6 runs).
+
+Each suite runs in its OWN subprocess: XLA's CPU JIT intermittently fails
+("Failed to materialize symbols") after many compilations accumulate in
+one long-lived process, so suite isolation is required for a reliable
+full run (suites behave identically run individually).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+SUITES = ["table1", "table2", "fig2", "fig3", "fig4", "comm", "ifca",
+          "robustness", "kernels", "roofline"]
+
+
+def run_suite(name: str, seeds: int) -> list[str]:
+    from benchmarks import (bench_comm_cost, bench_fig2_cifar,
+                            bench_fig3_fmnist, bench_fig4_eigvectors,
+                            bench_ifca, bench_kernels, bench_robustness,
+                            bench_roofline, bench_table1_similarity,
+                            bench_table2_crossdataset)
+
+    s = tuple(range(seeds))
+    fns = {
+        "table1": lambda: bench_table1_similarity.run(),
+        "table2": lambda: bench_table2_crossdataset.run(),
+        "fig2": lambda: bench_fig2_cifar.run(seeds=s),
+        "fig3": lambda: bench_fig3_fmnist.run(seeds=s),
+        "fig4": lambda: bench_fig4_eigvectors.run(),
+        "comm": lambda: bench_comm_cost.run(),
+        "ifca": lambda: bench_ifca.run(),
+        "robustness": lambda: bench_robustness.run(),
+        "kernels": lambda: bench_kernels.run(),
+        "roofline": lambda: bench_roofline.run(),
+    }
+    return fns[name]()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--seeds", type=int, default=2)
+    ap.add_argument("--suite-child", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    if args.suite_child:                      # child mode: run one suite
+        for row in run_suite(args.suite_child, args.seeds):
+            print(row, flush=True)
+        return
+
+    print("name,us_per_call,derived")
+    selected = [s for s in SUITES
+                if args.only is None or s.startswith(args.only)]
+    for name in selected:
+        t0 = time.time()
+        res = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run",
+             "--suite-child", name, "--seeds", str(args.seeds)],
+            capture_output=True, text=True,
+            env=dict(os.environ), timeout=3600)
+        out = res.stdout.strip()
+        if res.returncode != 0 or not out:
+            tail = (res.stderr or "")[-200:].replace("\n", " ")
+            print(f"{name}_ERROR,0.0,error={tail}", flush=True)
+        else:
+            print(out, flush=True)
+        print(f"# suite {name} took {time.time() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Render EXPERIMENTS.md roofline tables from the dry-run artifacts.
+
+Usage: python experiments/render_tables.py [tag]
+  tag = "" for the paper-faithful baseline artifacts, "opt" for the
+  optimized sweep.
+"""
+import json
+import sys
+from pathlib import Path
+
+DIR = Path(__file__).parent / "dryrun"
+
+
+def main():
+    tag = sys.argv[1] if len(sys.argv) > 1 else ""
+    suffix = f"__{tag}.json" if tag else ".json"
+    rows = []
+    for f in sorted(DIR.glob(f"*__pod{suffix}")):
+        if not tag and "__" in f.name.replace("__pod.json", "").split(
+                "__pod")[0].split("__", 2)[-1]:
+            pass
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            rows.append((r["arch"], r["shape"], None, r.get("error", "")))
+            continue
+        roof = r["roofline"]
+        rows.append((r["arch"], r["shape"], roof, r))
+    print("| arch | shape | compute (s) | memory (s) | collective (s) |"
+          " bottleneck | useful | HBM GB/dev | note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch, shape, roof, r in rows:
+        if roof is None:
+            print(f"| {arch} | {shape} | - | - | - | FAIL | - | - | {r[:40]} |")
+            continue
+        hbm = r["memory"].get("total_hbm_bytes", 0) / 2 ** 30
+        note = ("SWA variant" if r.get("variant") == "swa"
+                and r["shape"] == "long_500k" else "")
+        print(f"| {arch} | {shape} | {roof['compute_term_s']:.4f} "
+              f"| {roof['memory_term_s']:.4f} "
+              f"| {roof['collective_term_s']:.4f} | {roof['bottleneck']} "
+              f"| {roof['useful_flops_ratio']:.3f} | {hbm:.1f} | {note} |")
+
+
+if __name__ == "__main__":
+    main()

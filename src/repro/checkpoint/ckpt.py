@@ -1,0 +1,93 @@
+"""Sharding-aware npz checkpointing.
+
+Pytrees are flattened to ``path -> array`` with ``/``-joined keys and
+stored as compressed npz plus a json manifest (treedef + dtypes + step).
+On restore, arrays are device_put against the provided shardings (or left
+on host).  Works for params, optimizer state, and the MT-HFL trainer's
+per-LPS models; multi-host gather is ``jax.device_get`` on addressable
+shards (single-process per the dry-run setup).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+
+_SEP = "/"
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for keypath, leaf in flat:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in keypath)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.kind not in "biufc":   # bf16 etc: store as f32
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save_checkpoint(ckpt_dir: str | Path, step: int, tree: PyTree,
+                    keep: int = 3) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    path = ckpt_dir / f"step_{step:08d}.npz"
+    np.savez_compressed(path, **flat)
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest = {"step": step, "treedef": str(treedef),
+                "keys": sorted(flat)}
+    (ckpt_dir / f"step_{step:08d}.json").write_text(json.dumps(manifest))
+    # retention
+    ckpts = sorted(ckpt_dir.glob("step_*.npz"))
+    for old in ckpts[:-keep]:
+        old.unlink(missing_ok=True)
+        old.with_suffix(".json").unlink(missing_ok=True)
+    return path
+
+
+def latest_step(ckpt_dir: str | Path) -> int | None:
+    ckpt_dir = Path(ckpt_dir)
+    ckpts = sorted(ckpt_dir.glob("step_*.npz"))
+    if not ckpts:
+        return None
+    return int(ckpts[-1].stem.split("_")[1])
+
+
+def restore_checkpoint(ckpt_dir: str | Path, like: PyTree,
+                       step: int | None = None,
+                       shardings: PyTree | None = None) -> tuple[PyTree, int]:
+    """Restore into the structure of ``like`` (shape/dtype template).
+
+    Returns (tree, step).  ``shardings`` (same structure) device_puts each
+    leaf with its NamedSharding; otherwise arrays stay host-side jnp.
+    """
+    ckpt_dir = Path(ckpt_dir)
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    data = np.load(ckpt_dir / f"step_{step:08d}.npz")
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_flat = (jax.tree_util.tree_flatten(shardings)[0]
+                  if shardings is not None else [None] * len(flat_like))
+    leaves = []
+    for (keypath, leaf), sh in zip(flat_like, shard_flat):
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in keypath)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = data[key]
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        arr = jax.numpy.asarray(arr).astype(leaf.dtype)
+        leaves.append(jax.device_put(arr, sh) if sh is not None else arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -1,0 +1,2 @@
+"""Architecture + input-shape configs."""
+from repro.configs.base import ArchConfig, INPUT_SHAPES, InputShape, get_arch, list_archs

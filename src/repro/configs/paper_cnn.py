@@ -1,0 +1,5 @@
+"""The paper's own CIFAR-10 CNN (§III) — config handle for the FL substrate."""
+from repro.models.cnn import PaperCNNConfig
+
+CONFIG = PaperCNNConfig()
+REDUCED = PaperCNNConfig(c1=4, c2=8, fc1=32, fc2=16)

@@ -1,0 +1,6 @@
+"""The paper's own Fashion-MNIST MLP (§III) — config handle for the FL
+substrate."""
+from repro.models.mlp import PaperMLPConfig
+
+CONFIG = PaperMLPConfig()
+REDUCED = PaperMLPConfig(hidden=16)

@@ -1,0 +1,125 @@
+"""One-shot clustering protocol (paper Algorithm 2), single-host.
+
+Ties together ``repro.core.similarity`` (Eqs. 1-5) and
+``repro.core.clustering`` (HAC + cut) and tracks the communication ledger —
+the paper's headline claim is that the whole clustering costs each user one
+``(k x d)`` eigenvector upload + one ``(N,)`` relevance upload, before any
+training happens.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clustering as clu
+from repro.core import similarity as sim
+
+__all__ = ["CommLedger", "OneShotResult", "one_shot_clustering"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CommLedger:
+    """Bytes moved by the clustering protocol (fp32 accounting).
+
+    ``per_user_upload``: what one user sends (V_i broadcast + r row to GPS).
+    ``per_user_download``: what one user receives (all other users' V_j).
+    ``gps_total``: what the GPS receives (N relevance rows).
+    ``iterative_equiv``: what ONE ROUND of weight-based iterative clustering
+    would upload per user, given a model of ``model_params`` weights — the
+    literature baseline the paper contrasts against (its Fig. 4 point).
+    """
+
+    n_users: int
+    d: int
+    top_k: int
+    model_params: int = 0
+
+    @property
+    def per_user_upload(self) -> int:
+        return 4 * (self.top_k * self.d + self.n_users)
+
+    @property
+    def per_user_download(self) -> int:
+        return 4 * (self.n_users - 1) * self.top_k * self.d
+
+    @property
+    def gps_total(self) -> int:
+        return 4 * self.n_users * self.n_users
+
+    @property
+    def iterative_equiv(self) -> int:
+        return 4 * self.model_params
+
+    def summary(self) -> dict:
+        return {
+            "n_users": self.n_users,
+            "d": self.d,
+            "top_k": self.top_k,
+            "per_user_upload_bytes": self.per_user_upload,
+            "per_user_download_bytes": self.per_user_download,
+            "gps_total_bytes": self.gps_total,
+            "iterative_per_round_upload_bytes": self.iterative_equiv,
+            "oneshot_vs_iterative_ratio": (
+                self.per_user_upload / self.iterative_equiv
+                if self.model_params else None),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class OneShotResult:
+    labels: np.ndarray            # (N,) cluster assignment in 0..T-1
+    similarity: np.ndarray        # (N, N) symmetrized R
+    relevance: np.ndarray         # (N, N) directed r(i, j)
+    dendrogram: clu.Dendrogram
+    ledger: CommLedger
+
+
+def one_shot_clustering(features: Sequence[np.ndarray] | jax.Array,
+                        n_clusters: int,
+                        cfg: sim.SimilarityConfig | None = None,
+                        linkage: str = "average",
+                        model_params: int = 0) -> OneShotResult:
+    """Run paper Algorithm 2 end-to-end on per-user feature matrices.
+
+    ``features``: list of ``(n_i, d)`` arrays (or a padded ``(N, n, d)``
+    array).  Returns labels, the similarity matrix, and the comm ledger.
+    """
+    cfg = cfg or sim.SimilarityConfig()
+    if isinstance(features, (jax.Array, np.ndarray)):
+        n_users, _, d = features.shape
+        feats = features
+        n_valid = None
+    else:
+        n_users, d = len(features), features[0].shape[1]
+        feats = features
+        n_valid = None
+    top_k = cfg.top_k or d
+
+    # Directed relevance r and symmetrized R (Eqs. 1-5).
+    if isinstance(feats, (jax.Array, np.ndarray)):
+        grams = sim.batched_gram(jnp.asarray(feats), impl=cfg.impl)
+    else:
+        counts = [f.shape[0] for f in feats]
+        n_max = max(counts)
+        padded = np.zeros((n_users, n_max, d), dtype=np.float32)
+        for i, f in enumerate(feats):
+            padded[i, : f.shape[0]] = f
+        grams = sim.batched_gram(jnp.asarray(padded),
+                                 jnp.asarray(counts, dtype=jnp.float32),
+                                 impl=cfg.impl)
+    lam, v = jax.vmap(lambda g: sim.spectrum(g, top_k))(grams)
+    r = sim.relevance_matrix(grams, lam, v, cfg.eig_floor, impl=cfg.impl)
+    big_r = sim.symmetrize(r)
+
+    big_r_np = np.asarray(big_r)
+    dend = clu.hac(big_r_np, linkage=linkage)
+    labels = clu.cut(dend, n_clusters)
+    ledger = CommLedger(n_users=n_users, d=d, top_k=top_k,
+                        model_params=model_params)
+    return OneShotResult(labels=labels, similarity=big_r_np,
+                         relevance=np.asarray(r), dendrogram=dend,
+                         ledger=ledger)

@@ -1,0 +1,266 @@
+"""Data-similarity estimation (paper §II-B, Eqs. 1-5).
+
+Each user i holds features ``F_i = Phi(X_i) in R^{n_i x d}``.  The protocol:
+
+  1. ``gram(F_i)``            -> ``G_i = (1/n_i) F_i^T F_i``            (Eq. 1)
+  2. ``spectrum(G_i)``        -> top-k eigenpairs ``(lam_i, V_i)``
+  3. ``cross_project(G_i, V_j)`` -> ``lamhat_k = ||G_i v_k^{(j)}||``    (Eq. 2)
+  4. ``relevance(lam_i, lamhat)`` -> ``r(i,j)`` geometric-mean ratio    (Eqs. 3-4)
+  5. ``symmetrize(r)``        -> ``R(i,j) = (r(i,j)+r(j,i))/2``         (Eq. 5)
+
+Everything is jit-able and batched over users where noted.  The Gram matrix
+and the cross-projection are the compute hot spots; ``repro.kernels.gram``
+and ``repro.kernels.eigproject`` provide Pallas TPU kernels for them, and
+these functions accept an ``impl`` switch (``"jnp"`` default, ``"pallas"``
+on TPU / interpret mode).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "SimilarityConfig",
+    "gram",
+    "spectrum",
+    "user_signature",
+    "cross_project",
+    "relevance",
+    "relevance_matrix",
+    "symmetrize",
+    "similarity_matrix",
+    "perturb_eigenvectors",
+    "subsample_rows",
+]
+
+EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class SimilarityConfig:
+    """Configuration of the one-shot similarity protocol.
+
+    Attributes:
+      top_k: number of eigenvectors each user shares (paper Fig. 4: 5 suffice;
+        we default to 8 for margin).  ``0`` means "all d".
+      eig_floor: eigenvalues below this are clamped before the min/max ratio
+        (paper §III: tiny eigenvalues drift the geometric mean).
+      impl: "jnp" reference path or "pallas" TPU kernels.
+    """
+
+    top_k: int = 8
+    eig_floor: float = 1e-6
+    impl: str = "jnp"
+
+
+# ---------------------------------------------------------------------------
+# Step 1: Gram matrix (Eq. 1)
+# ---------------------------------------------------------------------------
+
+def gram(features: jax.Array, *, n_valid: jax.Array | int | None = None,
+         impl: str = "jnp") -> jax.Array:
+    """``(1/n) F^T F`` for one user's feature matrix ``F (n, d)``.
+
+    ``n_valid`` supports ragged per-user sample counts under a padded batch:
+    rows ``>= n_valid`` must already be zero, and the normalisation uses
+    ``n_valid`` instead of the padded length.
+    """
+    n = features.shape[0] if n_valid is None else n_valid
+    n = jnp.maximum(jnp.asarray(n, features.dtype), 1.0)
+    if impl == "pallas":
+        from repro.kernels.gram import ops as gram_ops
+
+        g = gram_ops.gram_matrix(features)
+    else:
+        g = features.T @ features
+    return g / n
+
+
+def batched_gram(features: jax.Array, n_valid: jax.Array | None = None,
+                 *, impl: str = "jnp") -> jax.Array:
+    """Vectorised Gram over a user axis: ``features (N, n, d) -> (N, d, d)``."""
+    if n_valid is None:
+        n_valid = jnp.full((features.shape[0],), features.shape[1],
+                           dtype=features.dtype)
+    return jax.vmap(lambda f, nv: gram(f, n_valid=nv, impl=impl))(
+        features, n_valid)
+
+
+# ---------------------------------------------------------------------------
+# Step 2: eigen-decomposition -> user signature
+# ---------------------------------------------------------------------------
+
+def spectrum(g: jax.Array, top_k: int = 0) -> tuple[jax.Array, jax.Array]:
+    """Eigen-decomposition of a PSD Gram matrix, descending order.
+
+    Returns ``(lam (k,), V (d, k))`` with ``k = top_k or d``.  ``jnp.linalg
+    .eigh`` returns ascending order, so we flip.  The Gram matrix is PSD by
+    construction; numerical negatives are clamped at 0.
+    """
+    lam, v = jnp.linalg.eigh(g)
+    lam = jnp.maximum(lam[::-1], 0.0)
+    v = v[:, ::-1]
+    if top_k and top_k < lam.shape[0]:
+        lam = lam[:top_k]
+        v = v[:, :top_k]
+    return lam, v
+
+
+def user_signature(features: jax.Array, cfg: SimilarityConfig,
+                   *, n_valid: jax.Array | int | None = None
+                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One user's public signature: ``(lam (k,), V (d,k), G (d,d))``.
+
+    ``lam`` and ``V`` are what the user shares; ``G`` stays private and is
+    used locally for cross-projection.
+    """
+    g = gram(features, n_valid=n_valid, impl=cfg.impl)
+    lam, v = spectrum(g, cfg.top_k)
+    return lam, v, g
+
+
+# ---------------------------------------------------------------------------
+# Step 3: cross-projection (Eq. 2)
+# ---------------------------------------------------------------------------
+
+def cross_project(g_own: jax.Array, v_other: jax.Array,
+                  *, impl: str = "jnp") -> jax.Array:
+    """``lamhat_k = || G_i v_k^{(j)} ||_2`` for each eigenvector column.
+
+    ``g_own (d, d)``, ``v_other (d, k)`` -> ``(k,)``.
+    """
+    if impl == "pallas":
+        from repro.kernels.eigproject import ops as proj_ops
+
+        return proj_ops.project_norms(g_own, v_other)
+    proj = g_own @ v_other                      # (d, k)
+    return jnp.sqrt(jnp.sum(proj * proj, axis=0))
+
+
+# ---------------------------------------------------------------------------
+# Step 4: relevance (Eqs. 3-4)
+# ---------------------------------------------------------------------------
+
+def relevance(lam_own: jax.Array, lam_hat: jax.Array,
+              eig_floor: float = 1e-6) -> jax.Array:
+    """Geometric mean of the min/max eigenvalue ratios.
+
+    Both spectra are floored at ``eig_floor`` first (paper §III
+    "Communication Improvement": a single tiny eigenvalue otherwise drives
+    the product to ~0 regardless of the rest).  Computed in log space for
+    stability: ``exp(mean_k log(min/max))``.
+    """
+    a = jnp.maximum(lam_own, eig_floor)
+    b = jnp.maximum(lam_hat, eig_floor)
+    lo = jnp.minimum(a, b)
+    hi = jnp.maximum(a, b)
+    return jnp.exp(jnp.mean(jnp.log(lo) - jnp.log(hi)))
+
+
+def relevance_matrix(grams: jax.Array, lams: jax.Array, vs: jax.Array,
+                     eig_floor: float = 1e-6, *, impl: str = "jnp"
+                     ) -> jax.Array:
+    """All-pairs directed relevance ``r (N, N)``.
+
+    ``grams (N, d, d)``: each user's private Gram.
+    ``lams (N, k)``, ``vs (N, d, k)``: the shared signatures.
+    ``r[i, j]`` is user *i*'s estimate of its relevance to user *j*
+    (projects j's eigenvectors through i's Gram, compares against i's own
+    spectrum — paper Algorithm 2 lines 7-12).
+    """
+
+    def row(g_i, lam_i):
+        def one(v_j):
+            lam_hat = cross_project(g_i, v_j, impl=impl)
+            return relevance(lam_i, lam_hat, eig_floor)
+
+        return jax.vmap(one)(vs)
+
+    return jax.vmap(row)(grams, lams)
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: privacy noise + subsampled Gram (paper §IV future work)
+# ---------------------------------------------------------------------------
+
+def perturb_eigenvectors(v: jax.Array, sigma: float, rng: jax.Array,
+                         renormalize: bool = True) -> jax.Array:
+    """Additive Gaussian noise on the SHARED eigenvectors (the only thing
+    that leaves a user) — the extra privacy layer the paper's §IV names as
+    future work.  ``v (d, k)`` or ``(N, d, k)``; columns are re-normalized
+    so the projection magnitudes stay comparable.
+
+    Robustness is benchmarked in ``benchmarks/bench_robustness.py``:
+    clustering survives sigma up to ~0.1 (columns are unit-norm).
+    """
+    noise = sigma * jax.random.normal(rng, v.shape, dtype=jnp.float32)
+    out = v.astype(jnp.float32) + noise
+    if renormalize:
+        norms = jnp.linalg.norm(out, axis=-2, keepdims=True)
+        out = out / jnp.maximum(norms, EPS)
+    return out.astype(v.dtype)
+
+
+def subsample_rows(features: np.ndarray, max_rows: int,
+                   seed: int = 0) -> np.ndarray:
+    """Nystrom-style row subsampling: the Gram estimate from ``max_rows``
+    uniformly-sampled rows is an unbiased second-moment estimator, cutting
+    the Eq.-1 cost from O(n d^2) to O(max_rows d^2) for n >> d regimes."""
+    n = features.shape[0]
+    if n <= max_rows:
+        return features
+    idx = np.random.default_rng(seed).choice(n, max_rows, replace=False)
+    return features[idx]
+
+
+# ---------------------------------------------------------------------------
+# Step 5: symmetrization (Eq. 5)
+# ---------------------------------------------------------------------------
+
+def symmetrize(r: jax.Array) -> jax.Array:
+    """``R = (r + r^T) / 2`` — the GPS-side average of the two directed views."""
+    return (r + r.T) / 2.0
+
+
+# ---------------------------------------------------------------------------
+# End-to-end (single host)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("top_k", "impl"))
+def _similarity_matrix_jit(features: jax.Array, n_valid: jax.Array,
+                           top_k: int, eig_floor: float, impl: str
+                           ) -> jax.Array:
+    grams = batched_gram(features, n_valid, impl=impl)
+    lam, v = jax.vmap(lambda g: spectrum(g, top_k))(grams)
+    r = relevance_matrix(grams, lam, v, eig_floor, impl=impl)
+    return symmetrize(r)
+
+
+def similarity_matrix(features: jax.Array | Sequence[np.ndarray],
+                      cfg: SimilarityConfig | None = None,
+                      n_valid: jax.Array | None = None) -> jax.Array:
+    """Full protocol on a padded user batch ``features (N, n, d)`` -> ``R (N, N)``.
+
+    Accepts a list of per-user ``(n_i, d)`` arrays (ragged); they are
+    zero-padded to the max ``n_i`` and the true counts are passed through.
+    """
+    cfg = cfg or SimilarityConfig()
+    if not isinstance(features, (jax.Array, np.ndarray)):
+        counts = [f.shape[0] for f in features]
+        n_max = max(counts)
+        d = features[0].shape[1]
+        padded = np.zeros((len(features), n_max, d), dtype=np.float32)
+        for i, f in enumerate(features):
+            padded[i, : f.shape[0]] = f
+        features = jnp.asarray(padded)
+        n_valid = jnp.asarray(counts, dtype=jnp.float32)
+    if n_valid is None:
+        n_valid = jnp.full((features.shape[0],), features.shape[1],
+                           dtype=jnp.float32)
+    return _similarity_matrix_jit(features, n_valid, cfg.top_k,
+                                  cfg.eig_floor, cfg.impl)

@@ -1,0 +1,6 @@
+"""Data substrate: synthetic federated datasets, partitioners, feature maps."""
+from repro.data.synthetic import (SyntheticImageSpec, make_task_dataset,
+                                  CIFAR_LIKE, FMNIST_LIKE, CIFAR100_LIKE)
+from repro.data.partition import (UserSpec, federated_split,
+                                  paper_cifar_two_task, paper_fmnist_three_task)
+from repro.data.features import feature_map, FeatureConfig

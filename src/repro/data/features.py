@@ -1,0 +1,108 @@
+"""Feature maps Phi for the similarity protocol (paper Eq. 1).
+
+The paper uses the identity map for FMNIST (m=784 is informative) and an
+ImageNet-pretrained ResNet18 for CIFAR-10 (m=3072 raw pixels are not).
+Offline we provide four fixed, *shared* maps — the protocol only needs Phi
+to be common across users and informative:
+
+  * identity          : Phi(x) = x                       (FMNIST path)
+  * random_projection : x W,  W (m, d) fixed Gaussian / sqrt(d)  (JL)
+  * random_conv       : fixed random-init 2-layer conv net -> GAP features
+                        (pretrained-feature surrogate; CIFAR path)
+  * pca               : top-d PCA basis fit on a public probe set
+
+All maps are deterministic in ``FeatureConfig.seed`` so every user applies
+the *same* Phi, as the protocol requires.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FeatureConfig", "feature_map"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureConfig:
+    kind: str = "random_projection"   # identity|random_projection|random_conv|pca
+    d: int = 256                      # output feature dimension
+    seed: int = 7
+    image_hw: tuple[int, int, int] | None = None  # (H, W, C) for random_conv
+    probe: np.ndarray | None = None   # public probe set for pca
+
+
+def _rp_matrix(m: int, d: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng((seed, 11))
+    return (rng.standard_normal((m, d)) / np.sqrt(d)).astype(np.float32)
+
+
+def _conv_params(c_in: int, seed: int) -> dict:
+    rng = np.random.default_rng((seed, 13))
+
+    def he(shape, fan_in):
+        return (rng.standard_normal(shape) * np.sqrt(2.0 / fan_in)
+                ).astype(np.float32)
+
+    return {
+        "w1": he((5, 5, c_in, 32), 5 * 5 * c_in),
+        "w2": he((5, 5, 32, 64), 5 * 5 * 32),
+    }
+
+
+@partial(jax.jit, static_argnames=("hw",))
+def _random_conv_features(x_flat: jax.Array, w1: jax.Array, w2: jax.Array,
+                          hw: tuple[int, int, int]) -> jax.Array:
+    h, w, c = hw
+    x = x_flat.reshape((-1, h, w, c))
+    dn = jax.lax.conv_dimension_numbers(x.shape, w1.shape,
+                                        ("NHWC", "HWIO", "NHWC"))
+    y = jax.lax.conv_general_dilated(x, w1, (2, 2), "SAME",
+                                     dimension_numbers=dn)
+    y = jax.nn.relu(y)
+    dn2 = jax.lax.conv_dimension_numbers(y.shape, w2.shape,
+                                         ("NHWC", "HWIO", "NHWC"))
+    y = jax.lax.conv_general_dilated(y, w2, (2, 2), "SAME",
+                                     dimension_numbers=dn2)
+    y = jax.nn.relu(y)
+    # 4x4 average-pooled grid -> flattened feature vector (pretrained-GAP
+    # surrogate): keeps spatial second-moment structure, d = 16*64 = 1024.
+    gh = max(1, y.shape[1] // 4)
+    gw = max(1, y.shape[2] // 4)
+    y = jax.lax.reduce_window(y, 0.0, jax.lax.add,
+                              (1, gh, gw, 1), (1, gh, gw, 1), "VALID")
+    y = y / (gh * gw)
+    return y.reshape((y.shape[0], -1))
+
+
+def feature_map(x: np.ndarray, cfg: FeatureConfig) -> np.ndarray:
+    """Apply Phi to a user's raw data ``x (n, m)`` -> ``(n, d')``."""
+    if cfg.kind == "identity":
+        return np.asarray(x, dtype=np.float32)
+    if cfg.kind == "random_projection":
+        w = _rp_matrix(x.shape[1], cfg.d, cfg.seed)
+        return np.asarray(x, dtype=np.float32) @ w
+    if cfg.kind == "random_conv":
+        if cfg.image_hw is None:
+            raise ValueError("random_conv needs image_hw=(H, W, C)")
+        p = _conv_params(cfg.image_hw[2], cfg.seed)
+        feats = _random_conv_features(jnp.asarray(x, dtype=jnp.float32),
+                                      jnp.asarray(p["w1"]),
+                                      jnp.asarray(p["w2"]), cfg.image_hw)
+        feats = np.asarray(feats)
+        if cfg.d and cfg.d < feats.shape[1]:
+            w = _rp_matrix(feats.shape[1], cfg.d, cfg.seed + 1)
+            feats = feats @ w
+        return feats
+    if cfg.kind == "pca":
+        if cfg.probe is None:
+            raise ValueError("pca needs a public probe set")
+        probe = np.asarray(cfg.probe, dtype=np.float32)
+        mu = probe.mean(0, keepdims=True)
+        _, _, vt = np.linalg.svd(probe - mu, full_matrices=False)
+        basis = vt[: cfg.d].T
+        return (np.asarray(x, dtype=np.float32) - mu) @ basis
+    raise ValueError(f"unknown feature map kind {cfg.kind!r}")

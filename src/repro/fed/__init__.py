@@ -1,0 +1,8 @@
+"""Federated substrate: clients, FedAvg, LPS/GPS hierarchy, MT-HFL trainer."""
+from repro.fed.partition import (split_params, merge_params, prefix_predicate,
+                                 tree_paths)
+from repro.fed.fedavg import weighted_mean  # (fedavg stays module-scoped:
+# re-exporting the function here would shadow the submodule binding)
+from repro.fed.client import local_update, ClientConfig
+from repro.fed.hierarchy import (lps_round, gps_aggregate, masked_cluster_mean)
+from repro.fed.trainer import MTHFLConfig, train_mthfl, MTHFLHistory

@@ -1,0 +1,75 @@
+"""Client-side local update (the inner loop of FedAvg).
+
+``local_update`` runs ``steps`` optimizer steps over pre-batched data with
+``jax.lax.scan`` so one client round is a single jit-compiled call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+
+PyTree = Any
+LossFn = Callable[[PyTree, dict], jax.Array]
+
+__all__ = ["ClientConfig", "local_update", "make_batches"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientConfig:
+    lr: float = 0.05
+    optimizer: str = "sgd"          # sgd | momentum | adamw
+    clip_norm: float = 0.0          # 0 disables
+    weight_decay: float = 0.0
+
+
+def _make_opt(cfg: ClientConfig) -> optim.Optimizer:
+    if cfg.optimizer == "sgd":
+        return optim.sgd(cfg.lr)
+    if cfg.optimizer == "momentum":
+        return optim.momentum(cfg.lr)
+    if cfg.optimizer == "adamw":
+        return optim.adamw(cfg.lr, weight_decay=cfg.weight_decay)
+    raise ValueError(f"unknown optimizer {cfg.optimizer!r}")
+
+
+@partial(jax.jit, static_argnames=("loss_fn", "optimizer", "clip_norm"))
+def _run(params: PyTree, batches: dict, loss_fn: LossFn,
+         optimizer: optim.Optimizer, clip_norm: float) -> tuple[PyTree, jax.Array]:
+    opt_state = optimizer.init(params)
+
+    def step(carry, batch):
+        p, s = carry
+        loss, grads = jax.value_and_grad(loss_fn)(p, batch)
+        if clip_norm:
+            grads = optim.clip_by_global_norm(grads, clip_norm)
+        updates, s = optimizer.update(grads, s, p)
+        p = optim.apply_updates(p, updates)
+        return (p, s), loss
+
+    (params, _), losses = jax.lax.scan(step, (params, opt_state), batches)
+    return params, losses
+
+
+def local_update(params: PyTree, batches: dict, loss_fn: LossFn,
+                 cfg: ClientConfig) -> tuple[PyTree, jax.Array]:
+    """Run one client's local round.
+
+    ``batches``: pytree of arrays with a leading ``steps`` axis (stacked
+    mini-batches).  Returns (new_params, per-step losses).
+    """
+    return _run(params, batches, loss_fn, _make_opt(cfg), cfg.clip_norm)
+
+
+def make_batches(x, y, batch_size: int, steps: int, rng) -> dict:
+    """Stack ``steps`` random mini-batches from (x, y) -> scan-ready pytree."""
+    import numpy as np
+
+    n = len(y)
+    idx = rng.integers(0, n, size=(steps, min(batch_size, n)))
+    return {"x": jnp.asarray(x[idx]), "y": jnp.asarray(y[idx])}

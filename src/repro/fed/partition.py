@@ -1,0 +1,88 @@
+"""Common/task-specific parameter partition (paper §II-D).
+
+The paper's MT-HFL shares only the *common representation layers* (the two
+conv layers for its CNN; embedding + first K blocks for transformer archs)
+with the GPS.  Parameters live in nested-dict pytrees; a partition is a
+predicate over key paths.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterable, Mapping
+
+PyTree = Any
+PathPred = Callable[[tuple[str, ...]], bool]
+
+__all__ = ["tree_paths", "prefix_predicate", "split_params", "merge_params"]
+
+
+def tree_paths(tree: Mapping, prefix: tuple[str, ...] = ()) -> list[tuple[str, ...]]:
+    """All leaf key-paths of a nested dict."""
+    out = []
+    for k, v in tree.items():
+        p = prefix + (str(k),)
+        if isinstance(v, Mapping):
+            out.extend(tree_paths(v, p))
+        else:
+            out.append(p)
+    return out
+
+
+def prefix_predicate(prefixes: Iterable[str | tuple[str, ...]]) -> PathPred:
+    """Predicate matching any path whose joined form starts with a prefix.
+
+    ``prefix_predicate(["conv1", "conv2"])`` marks the paper-CNN common
+    layers; ``prefix_predicate(["embed", "blocks/0", "blocks/1"])`` marks a
+    transformer split.
+    """
+    norm = []
+    for p in prefixes:
+        if isinstance(p, tuple):
+            p = "/".join(p)
+        norm.append(p)
+
+    def pred(path: tuple[str, ...]) -> bool:
+        joined = "/".join(path)
+        return any(joined == p or joined.startswith(p + "/") for p in norm)
+
+    return pred
+
+
+def split_params(params: Mapping, is_common: PathPred
+                 ) -> tuple[dict, dict]:
+    """Split a nested-dict pytree into (common, specific) sub-dicts.
+
+    Every leaf goes to exactly one side; empty sub-dicts are pruned.
+    """
+
+    def go(node: Mapping, prefix: tuple[str, ...]) -> tuple[dict, dict]:
+        com, spec = {}, {}
+        for k, v in node.items():
+            p = prefix + (str(k),)
+            if isinstance(v, Mapping):
+                c, s = go(v, p)
+                if c:
+                    com[k] = c
+                if s:
+                    spec[k] = s
+            else:
+                (com if is_common(p) else spec)[k] = v
+        return com, spec
+
+    return go(params, ())
+
+
+def merge_params(common: Mapping, specific: Mapping) -> dict:
+    """Inverse of ``split_params`` (disjoint deep merge)."""
+
+    def go(a: Mapping, b: Mapping) -> dict:
+        out = dict(a)
+        for k, v in b.items():
+            if k in out:
+                if not (isinstance(out[k], Mapping) and isinstance(v, Mapping)):
+                    raise ValueError(f"overlapping leaf at key {k!r}")
+                out[k] = go(out[k], v)
+            else:
+                out[k] = v
+        return out
+
+    return go(common, specific)

@@ -1,0 +1,1 @@
+from repro.kernels.eigproject.ops import project_norms

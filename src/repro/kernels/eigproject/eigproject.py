@@ -1,0 +1,79 @@
+"""Fused Gram-projection + column-norm kernel (paper Eq. 2).
+
+Computes ``lamhat_k = || G v_k ||_2`` for all k eigenvector columns in one
+pass: grid = (k/bk, d/bd_row, d/bd_in); each step multiplies a (bd_row,
+bd_in) tile of G with a (bd_in, bk) tile of V into an fp32 row-block
+accumulator; when a row-block's inner reduction completes, its squared
+values are added to the per-column sum-of-squares accumulator, and the
+final step writes ``sqrt``.  The (d, bk) intermediate ``G @ V`` never
+round-trips to HBM — that is the fusion win over the two-op jnp form.
+
+Grid order: k-block outermost, then row-blocks, inner-dim innermost, so
+both accumulators are live for one (k-block) at a time.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(g_ref, v_ref, o_ref, prod_acc, sq_acc, *, n_row: int,
+            n_inner: int):
+    r = pl.program_id(1)
+    c = pl.program_id(2)
+
+    @pl.when((r == 0) & (c == 0))
+    def _init_sq():
+        sq_acc[...] = jnp.zeros_like(sq_acc)
+
+    @pl.when(c == 0)
+    def _init_prod():
+        prod_acc[...] = jnp.zeros_like(prod_acc)
+
+    prod_acc[...] += jax.lax.dot_general(
+        g_ref[...], v_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(c == n_inner - 1)
+    def _accum_sq():
+        sq_acc[...] += jnp.sum(jnp.square(prod_acc[...]), axis=0,
+                               keepdims=True)
+
+    @pl.when((r == n_row - 1) & (c == n_inner - 1))
+    def _flush():
+        o_ref[...] = jnp.sqrt(sq_acc[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_k",
+                                             "interpret"))
+def project_norms_pallas(g: jax.Array, v: jax.Array, block_d: int = 128,
+                         block_k: int = 128, interpret: bool = True
+                         ) -> jax.Array:
+    """``g (d, d)``, ``v (d, k)`` -> ``||g @ v||_2`` per column, ``(k,)``."""
+    d, d2 = g.shape
+    dv, k = v.shape
+    if d != d2 or dv != d:
+        raise ValueError(f"bad shapes g={g.shape} v={v.shape}")
+    if d % block_d or k % block_k:
+        raise ValueError(f"{(d, k)} not divisible by ({block_d}, {block_k})")
+    n_row = d // block_d
+    n_inner = d // block_d
+    grid = (k // block_k, n_row, n_inner)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_row=n_row, n_inner=n_inner),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_d, block_d), lambda kk, r, c: (r, c)),
+            pl.BlockSpec((block_d, block_k), lambda kk, r, c: (c, kk)),
+        ],
+        out_specs=pl.BlockSpec((1, block_k), lambda kk, r, c: (0, kk)),
+        out_shape=jax.ShapeDtypeStruct((1, k), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_d, block_k), jnp.float32),
+                        pltpu.VMEM((1, block_k), jnp.float32)],
+        interpret=interpret,
+    )(g, v)
+    return out[0]

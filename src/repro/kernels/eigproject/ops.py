@@ -1,0 +1,32 @@
+"""Public wrapper for the eigprojection kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.eigproject.eigproject import project_norms_pallas
+from repro.kernels.eigproject.ref import project_norms_ref
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def project_norms(g: jax.Array, v: jax.Array, block_d: int = 128,
+                  block_k: int = 128, interpret: bool | None = None
+                  ) -> jax.Array:
+    """``lamhat = ||G v_k||`` per column.  Pads to block multiples; the
+    padded G rows/cols are zero so norms over the valid columns are exact."""
+    d = g.shape[0]
+    k = v.shape[1]
+    interpret = (not _is_tpu()) if interpret is None else interpret
+    pad_d = (-d) % block_d
+    pad_k = (-k) % block_k
+    if pad_d:
+        g = jnp.pad(g, ((0, pad_d), (0, pad_d)))
+        v = jnp.pad(v, ((0, pad_d), (0, 0)))
+    if pad_k:
+        v = jnp.pad(v, ((0, 0), (0, pad_k)))
+    out = project_norms_pallas(g, v, block_d=block_d, block_k=block_k,
+                               interpret=interpret)
+    return out[:k]

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the eigprojection kernel."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def project_norms_ref(g: jax.Array, v: jax.Array) -> jax.Array:
+    proj = g.astype(jnp.float32) @ v.astype(jnp.float32)
+    return jnp.sqrt(jnp.sum(proj * proj, axis=0))

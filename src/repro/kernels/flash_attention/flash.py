@@ -1,0 +1,98 @@
+"""Blocked online-softmax (flash) attention Pallas kernel.
+
+Causal and sliding-window variants for the training/prefill path.  Inputs
+are laid out ``(BH, S, hd)`` (batch*heads flattened into the leading grid
+axis).  Grid = (BH, S/bq, Skv/bkv) with the KV axis innermost; per-q-block
+running max / running sum / output accumulator live in VMEM scratch across
+the KV sweep (the classic FlashAttention-2 schedule, re-tiled for the MXU:
+bq = bkv = 128, hd padded to a multiple of 128).
+
+Row statistics are stored broadcast across a 128-lane scratch so every
+store is lane-aligned for the VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+LANES = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int, bq: int, bkv: int,
+            n_kv: int):
+    kv_i = pl.program_id(2)
+    q_i = pl.program_id(1)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # (bq, hd)
+    k = k_ref[0]                                   # (bkv, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = q_i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    kpos = kv_i * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = jnp.ones((bq, bkv), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_ref[:, :1]                          # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)                 # (bq, 1)
+    l_new = l_ref[:, :1] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(kv_i == n_kv - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[:, :1], 1e-20)
+        o_ref[0, ...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "interpret"))
+def flash_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                 causal: bool = True, window: int = 0, block_q: int = 128,
+                 block_kv: int = 128, interpret: bool = True) -> jax.Array:
+    """``q (BH, S, hd)``, ``k/v (BH, Skv, hd)`` -> ``(BH, S, hd)``."""
+    bh, s, hd = q.shape
+    skv = k.shape[1]
+    if s % block_q or skv % block_kv:
+        raise ValueError(f"seq {s}/{skv} not divisible by blocks")
+    grid = (bh, s // block_q, skv // block_kv)
+    scale = hd ** -0.5
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          bq=block_q, bkv=block_kv, n_kv=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, LANES), jnp.float32),
+                        pltpu.VMEM((block_q, LANES), jnp.float32),
+                        pltpu.VMEM((block_q, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

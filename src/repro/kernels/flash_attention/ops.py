@@ -1,0 +1,38 @@
+"""Public wrapper: (B, S, H, hd) layout adapter + backend dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash import flash_pallas
+from repro.kernels.flash_attention.ref import flash_ref
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """``q (B, S, H, hd)``, ``k/v (B, Skv, H, hd)`` -> ``(B, S, H, hd)``.
+
+    KV heads must already be group-expanded to H (attention.py does this).
+    Falls back to the jnp oracle when the sequence is not block-aligned.
+    """
+    b, s, h, hd = q.shape
+    skv = k.shape[1]
+    interpret = (not _is_tpu()) if interpret is None else interpret
+
+    def flat(t):
+        return t.transpose(0, 2, 1, 3).reshape(b * h, t.shape[1], hd)
+
+    qf, kf, vf = flat(q), flat(k), flat(v)
+    if s % block_q or skv % block_kv or hd % 128:
+        out = flash_ref(qf, kf, vf, causal=causal, window=window)
+    else:
+        out = flash_pallas(qf, kf, vf, causal=causal, window=window,
+                           block_q=block_q, block_kv=block_kv,
+                           interpret=interpret)
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)

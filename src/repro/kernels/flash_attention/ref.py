@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for flash attention (same layout/contract)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_ref(q, k, v, causal: bool = True, window: int = 0):
+    """``q (BH, S, hd)``, ``k/v (BH, Skv, hd)``."""
+    s, skv = q.shape[1], k.shape[1]
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bsh,bth->bst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(skv)[None, :]
+    mask = jnp.ones((s, skv), bool)
+    if causal:
+        mask &= j <= i
+    if window:
+        mask &= (i - j) < window
+    logits = jnp.where(mask[None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bst,bth->bsh", probs, v.astype(probs.dtype)
+                      ).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.gram.ops import gram_matrix

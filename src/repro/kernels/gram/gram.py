@@ -1,0 +1,59 @@
+"""Tiled X^T X Pallas kernel (the Eq.-1 Gram hot spot).
+
+Computes ``C = X^T X`` for ``X (n, d)`` as a 3-D grid matmul:
+grid = (d/bd_i, d/bd_j, n/bn); each step loads two (bn, bd) tiles of X into
+VMEM, accumulates ``x_i^T x_j`` into an fp32 VMEM scratch on the MXU, and
+writes the (bd_i, bd_j) output tile on the last n-step.  The n axis is the
+innermost grid dimension, so the accumulator is live for exactly one output
+tile at a time.
+
+MXU alignment: block sizes default to 128 (v5e systolic array); ops.py
+pads inputs that are not block-divisible.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_i_ref, x_j_ref, o_ref, acc_ref, *, n_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_i_ref[...], x_j_ref[...],
+        (((0,), (0,)), ((), ())),            # contract over the n axis
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_d", "block_n", "interpret"))
+def gram_pallas(x: jax.Array, block_d: int = 128, block_n: int = 128,
+                interpret: bool = True) -> jax.Array:
+    """``x (n, d)`` -> ``x.T @ x (d, d)`` in fp32."""
+    n, d = x.shape
+    if n % block_n or d % block_d:
+        raise ValueError(f"shape {(n, d)} not divisible by blocks "
+                         f"({block_n}, {block_d})")
+    grid = (d // block_d, d // block_d, n // block_n)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_d), lambda i, j, k: (k, i)),
+            pl.BlockSpec((block_n, block_d), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_d, block_d), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_d, block_d), jnp.float32)],
+        interpret=interpret,
+    )(x, x)

@@ -1,0 +1,27 @@
+"""Public wrapper for the Gram kernel: pad-to-block, backend dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gram.gram import gram_pallas
+from repro.kernels.gram.ref import gram_ref
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gram_matrix(x: jax.Array, block_d: int = 128, block_n: int = 128,
+                interpret: bool | None = None) -> jax.Array:
+    """``x (n, d)`` -> ``x^T x (d, d)`` fp32.  Zero-pads to block multiples
+    (zero rows/cols do not change X^T X on the valid region)."""
+    n, d = x.shape
+    interpret = (not _is_tpu()) if interpret is None else interpret
+    pad_n = (-n) % block_n
+    pad_d = (-d) % block_d
+    if pad_n or pad_d:
+        x = jnp.pad(x, ((0, pad_n), (0, pad_d)))
+    out = gram_pallas(x, block_d=block_d, block_n=block_n,
+                      interpret=interpret)
+    return out[:d, :d]

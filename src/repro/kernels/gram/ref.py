@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the Gram kernel."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def gram_ref(x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    return xf.T @ xf

@@ -1,0 +1,2 @@
+"""Launch layer: production meshes, sharding rules, train/serve steps,
+multi-pod dry-run, roofline analysis."""

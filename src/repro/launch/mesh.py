@@ -1,0 +1,30 @@
+"""Production mesh builders (functions, never module-level constants, so
+importing this module never touches jax device state).
+
+Target: TPU v5e.  Single pod = 16 x 16 = 256 chips (data x model);
+multi-pod = 2 x 16 x 16 = 512 chips (pod x data x model).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "batch_axes", "fsdp_axis", "tensor_axis"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """Mesh axes the global batch is sharded over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def fsdp_axis(mesh: jax.sharding.Mesh) -> str | None:
+    return "data" if "data" in mesh.axis_names else None
+
+
+def tensor_axis(mesh: jax.sharding.Mesh) -> str | None:
+    return "model" if "model" in mesh.axis_names else None

@@ -1,0 +1,182 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Per (arch x shape x mesh):
+
+  compute_term    = HLO_FLOPs_global  / (chips * PEAK_FLOPS)
+  memory_term     = HLO_bytes_global  / (chips * HBM_BW)
+  collective_term = collective_bytes_global / (chips * LINK_BW)
+
+``compiled.cost_analysis()`` provides per-device FLOPs / bytes accessed
+(the SPMD module is the per-device program), so global = per_device *
+chips and the two formulations coincide.  Collective bytes are NOT in
+cost_analysis: we parse the optimized HLO (``compiled.as_text()``) and sum
+the shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (using max(result, operand) bytes per op —
+a ring-transfer proxy, documented in EXPERIMENTS.md).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*(\w+\[[\d,]*\][^ ]*|\([^)]*\))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes over every TYPE[dims] occurrence in ``text``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_per_device: int
+    counts: dict[str, int]
+    bytes_by_kind: dict[str, int]
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    bytes_by_kind: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "-done(" in line:          # async pair: count the -start only
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result_text, kind = m.groups()
+        result_bytes = _shape_bytes(result_text)
+        # operand shapes appear in the argument list after the op name
+        args = line[m.end():]
+        operand_bytes = _shape_bytes(args)
+        counts[kind] += 1
+        bytes_by_kind[kind] += max(result_bytes, operand_bytes)
+    return CollectiveStats(
+        bytes_per_device=sum(bytes_by_kind.values()),
+        counts={k: v for k, v in counts.items() if v},
+        bytes_by_kind={k: v for k, v in bytes_by_kind.items() if v})
+
+
+def model_flops(n_params_active: int, tokens: int, kind: str) -> float:
+    """6ND for training (fwd+bwd), 2ND for inference."""
+    factor = 6.0 if kind == "train" else 2.0
+    return factor * n_params_active * tokens
+
+
+@dataclasses.dataclass
+class Roofline:
+    chips: int
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_counts: dict[str, int]
+    collective_bytes_by_kind: dict[str, int]
+    model_flops_global: float
+
+    @property
+    def compute_term_s(self) -> float:
+        return self.hlo_flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_term_s(self) -> float:
+        return self.hlo_bytes_per_device / HBM_BW
+
+    @property
+    def collective_term_s(self) -> float:
+        return self.collective_bytes_per_device / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_term_s,
+                 "memory": self.memory_term_s,
+                 "collective": self.collective_term_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.hlo_flops_per_device * self.chips
+        return self.model_flops_global / total if total else 0.0
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "chips": self.chips,
+            "hlo_flops_per_device": self.hlo_flops_per_device,
+            "hlo_bytes_per_device": self.hlo_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "collective_counts": self.collective_counts,
+            "collective_bytes_by_kind": self.collective_bytes_by_kind,
+            "model_flops_global": self.model_flops_global,
+            "compute_term_s": self.compute_term_s,
+            "memory_term_s": self.memory_term_s,
+            "collective_term_s": self.collective_term_s,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def analyze(compiled, chips: int, model_flops_global: float) -> Roofline:
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):     # some backends return [dict]
+        cost = cost[0] if cost else {}
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    stats = parse_collectives(compiled.as_text())
+    return Roofline(
+        chips=chips,
+        hlo_flops_per_device=flops,
+        hlo_bytes_per_device=byts,
+        collective_bytes_per_device=float(stats.bytes_per_device),
+        collective_counts=stats.counts,
+        collective_bytes_by_kind=stats.bytes_by_kind,
+        model_flops_global=model_flops_global,
+    )
+
+
+def memory_summary(compiled) -> dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:              # pragma: no cover
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = float(v)
+    if out:
+        out["total_hbm_bytes"] = (out.get("argument_size_in_bytes", 0)
+                                  + out.get("output_size_in_bytes", 0)
+                                  + out.get("temp_size_in_bytes", 0)
+                                  - out.get("alias_size_in_bytes", 0))
+    return out

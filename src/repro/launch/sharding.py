@@ -1,0 +1,311 @@
+"""Logical-axis sharding rules with divisibility fallback (MaxText-style).
+
+Every parameter / state / input leaf gets an ordered list of CANDIDATE
+PartitionSpecs (most-parallel first); ``first_fitting`` picks the first one
+whose every named mesh axis evenly divides the corresponding dimension.
+GQA kv-heads that don't divide the 16-way model axis therefore fall back to
+head-dim sharding, then to replication, instead of erroring — the paper
+pool's heterogeneous head counts make this mandatory.
+
+Conventions:
+  * params: tensor-parallel on "model" (output dim of up-projections, input
+    dim of down-projections), FSDP on "data" over the other big dim,
+    stacked layer axes never sharded (scan).
+  * activations (``shard_fn``): batch on ("pod","data"); mode "seq" also
+    shards the sequence dim on "model" between blocks (memory), mode
+    "tensor" shards d_model on "model", mode "dp" leaves only batch.
+  * KV caches: batch -> data; kv-heads -> model (else head_dim -> model);
+    batch=1 long-context falls back to window/seq -> data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch import mesh as mesh_lib
+
+PyTree = Any
+
+__all__ = ["ShardingOptions", "first_fitting", "param_specs", "state_specs",
+           "batch_specs", "make_shard_fn", "named", "attach"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingOptions:
+    fsdp: bool = True
+    activation_mode: str = "seq"      # dp | seq | tensor | megatron
+    # "megatron" = Megatron-LM sequence parallelism: block-boundary
+    # residuals (the remat-saved tensors) are SEQ-sharded over "model"
+    # (16x activation memory saving), while block INTERIORS are
+    # constrained replicated-over-model so XLA keeps the qkv/ffn matmuls
+    # tensor-parallel (sharded weights) and inserts all-gather/reduce-
+    # scatter at the two boundaries — instead of gathering full f32
+    # weights per use, which is what a blanket seq constraint causes
+    # (measured 18 GB/layer/device; §Perf it-6).
+
+
+def _divides(spec: P, shape: tuple[int, ...], mesh: Mesh) -> bool:
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        if dim % total:
+            return False
+    return True
+
+
+def first_fitting(shape: tuple[int, ...], candidates: Sequence[P],
+                  mesh: Mesh) -> P:
+    for spec in candidates:
+        if len(spec) > len(shape):
+            continue
+        if _divides(spec, shape, mesh):
+            return spec
+    return P()
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+# 2-D weights whose OUTPUT dim is tensor-parallel ("model").
+_OUT_SHARDED = {"wq", "wk", "wv", "wg", "wr", "w_up", "w_gate", "w_in_x",
+                "w_in_y", "w_a", "w_i", "mix_a1", "w_a1", "router",
+                "frame_proj", "patch_proj"}
+# 2-D weights whose INPUT dim is tensor-parallel.
+_IN_SHARDED = {"wo", "w_down", "w_out"}
+
+
+def _param_candidates(path: tuple[str, ...], shape: tuple[int, ...],
+                      opts: ShardingOptions) -> list[P]:
+    name = path[-1]
+    parent = path[-2] if len(path) > 1 else ""
+    # number of leading stacked-layer axes (scan over groups / enc / dec)
+    n_stack = len(shape) - _base_rank(path, shape)
+    lead = (None,) * n_stack
+    fsdp = "data" if opts.fsdp else None
+
+    if name == "embed":
+        return [P("model", fsdp), P("model", None), P(None, "model"), P()]
+    if name == "head":
+        return [P(fsdp, "model"), P(None, "model"), P("model", None), P()]
+
+    base = len(shape) - n_stack
+    if parent == "channel" and name == "wv":          # rwkv channel (f, d)
+        return [P(*lead, "model", fsdp), P(*lead, "model", None), P()]
+    if name in _IN_SHARDED and base == 2:
+        return [P(*lead, "model", fsdp), P(*lead, "model", None), P()]
+    if name in _OUT_SHARDED and base == 2:
+        return [P(*lead, fsdp, "model"), P(*lead, None, "model"), P()]
+    if base == 3 and name in ("w_up", "w_gate", "w_down"):
+        # MoE expert stacks (E, d_in, d_out): expert-parallel on "model",
+        # FSDP over the d_model dim.
+        if name == "w_down":
+            return [P(*lead, "model", None, fsdp),
+                    P(*lead, "model", None, None), P()]
+        return [P(*lead, "model", fsdp, None),
+                P(*lead, "model", None, None), P()]
+    # everything else (norm scales, biases, mixing vectors, conv weights,
+    # decay params): replicated.
+    return [P()]
+
+
+def _base_rank(path: tuple[str, ...], shape: tuple[int, ...]) -> int:
+    """Rank of the leaf EXCLUDING stacked layer axes."""
+    name = path[-1]
+    stacked = any(p in ("groups", "enc", "dec") for p in path[:-1])
+    parent = path[-2] if len(path) > 1 else ""
+    if name in ("embed", "head", "frame_proj", "patch_proj", "final_norm",
+                "enc_norm"):
+        return len(shape)
+    base = {
+        "mu_x": 1, "mu": 2, "mix_a1": 2, "mix_a2": 3, "w0": 1, "w_a1": 2,
+        "w_a2": 2, "u": 2, "ln_x": 1, "ln1": 1, "ln2": 1, "ln3": 1,
+        "mu_k": 1, "mu_r": 1, "conv_w": 2, "conv_b": 1, "b_a": 1, "b_i": 1,
+        "lam": 1, "q_norm": 1, "k_norm": 1, "router": 2,
+    }.get(name)
+    if base is None:
+        # generic matrices: 2-D, except MoE expert stacks which are 3-D
+        if name in ("w_up", "w_gate", "w_down") and len(shape) - (
+                1 if stacked else 0) == 3:
+            base = 3
+        else:
+            base = 2
+    return base if stacked or base == len(shape) else len(shape)
+
+
+def _paths_and_leaves(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for keypath, leaf in flat:
+        path = tuple(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in keypath)
+        out.append((path, leaf))
+    return out, treedef
+
+
+def param_specs(params_shape: PyTree, mesh: Mesh,
+                opts: ShardingOptions | None = None) -> PyTree:
+    """Pytree of PartitionSpecs matching a params shape-tree."""
+    opts = opts or ShardingOptions()
+    flat, treedef = _paths_and_leaves(params_shape)
+    specs = []
+    for path, leaf in flat:
+        cands = _param_candidates(path, tuple(leaf.shape), opts)
+        specs.append(first_fitting(tuple(leaf.shape), cands, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# Decode-state specs
+# ---------------------------------------------------------------------------
+
+def _state_candidates(path: tuple[str, ...], shape: tuple[int, ...],
+                      mesh: Mesh) -> list[P]:
+    name = path[-1]
+    if name == "length":
+        return [P()]
+    data = "data" if "data" in mesh.axis_names else None
+    if name in ("k", "v", "mem_k", "mem_v"):
+        # (..., B, S, K, hd) possibly with leading stacked layer axis.
+        # Preference: kv-head parallel (collective-free GQA grouping), then
+        # SEQ parallel (flash-decode style: partial attention per shard +
+        # softmax combine), then head-dim parallel (contraction sharding —
+        # measured 40x worse collective on GQA kv=8, §Perf it-4).
+        lead = (None,) * (len(shape) - 4)
+        return [
+            P(*lead, data, None, "model", None),     # kv-head parallel
+            P(*lead, data, "model", None, None),     # seq parallel
+            P(*lead, data, None, None, "model"),     # head-dim parallel
+            P(*lead, None, ("data", "model"), None, None),  # B=1: seq on all
+            P(*lead, None, "model", None, None),
+            P(*lead, None, None, "model", None),
+            P(*lead, None, None, None, "model"),
+            P(),
+        ]
+    if name == "wkv":
+        # (..., B, H, hdk, hdv)
+        lead = (None,) * (len(shape) - 4)
+        return [P(*lead, data, "model", None, None),
+                P(*lead, None, "model", None, None), P()]
+    if name in ("shift_att", "shift_ffn", "h"):
+        lead = (None,) * (len(shape) - 2)
+        return [P(*lead, data, "model"), P(*lead, None, "model"), P()]
+    if name == "conv":
+        lead = (None,) * (len(shape) - 3)
+        return [P(*lead, data, None, "model"),
+                P(*lead, None, None, "model"), P()]
+    return [P()]
+
+
+def state_specs(state_shape: PyTree, mesh: Mesh) -> PyTree:
+    flat, treedef = _paths_and_leaves(state_shape)
+    specs = [first_fitting(tuple(l.shape),
+                           _state_candidates(p, tuple(l.shape), mesh), mesh)
+             for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# Batch specs + activation constraints
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch_shape: PyTree, mesh: Mesh) -> PyTree:
+    b_axes = mesh_lib.batch_axes(mesh)
+
+    def spec(leaf):
+        cands = [P(b_axes, *(None,) * (len(leaf.shape) - 1)), P()]
+        return first_fitting(tuple(leaf.shape), cands, mesh)
+
+    return jax.tree.map(spec, batch_shape)
+
+
+def make_shard_fn(mesh: Mesh, opts: ShardingOptions | None = None
+                  ) -> Callable[[jax.Array, str], jax.Array]:
+    """Activation-constraint callback handed to the model stacks."""
+    opts = opts or ShardingOptions()
+    b_axes = mesh_lib.batch_axes(mesh)
+
+    def shard(x: jax.Array, name: str) -> jax.Array:
+        if x.ndim < 2:
+            return x
+        rest = (None,) * (x.ndim - 3)
+        if name == "logits":
+            cands = [P(b_axes, *rest, None, "model"), P()]
+        elif name == "interior":
+            if opts.activation_mode != "megatron":
+                return x
+            cands = [P(b_axes, *(None,) * (x.ndim - 1)), P()]
+        elif name == "kv_cache":
+            # (B, S, K, hd): mirror the state-spec preference order so the
+            # in-step cache keeps the input sharding (no involuntary
+            # gather around the dynamic_update_slice).
+            cands = [P("data", None, "model", None),
+                     P("data", "model", None, None),
+                     P("data", None, None, "model"),
+                     P(None, ("data", "model"), None, None),
+                     P(None, "model", None, None), P()]
+        elif name.startswith("attn_logits"):
+            # (B, H, 1, S).  If the kv-head count divides the model axis
+            # the cache is head-sharded -> shard H (collective-free).
+            # Otherwise the cache is seq-sharded -> shard S so XLA does a
+            # partial softmax + small combine instead of gathering KV.
+            try:
+                n_kv = int(name.split(":")[1])
+            except (IndexError, ValueError):
+                n_kv = 0
+            msize = mesh.shape.get("model", 1)
+            mid = (None,) * (x.ndim - 3)  # (B, K[, G, 1], S) / (B, H, 1, S)
+            dsize = mesh.shape.get("data", 1)
+            batch_shardable = x.shape[0] % dsize == 0
+            if n_kv and n_kv % msize == 0 and batch_shardable:
+                cands = [P("data", "model", *mid, None),
+                         P("data", None, *mid, "model"), P()]
+            elif n_kv and n_kv % msize == 0:
+                # B=1 long-context: the cache fell back to seq-over-all —
+                # keep the logits aligned with it
+                cands = [P(None, None, *mid, ("data", "model")),
+                         P(None, "model", *mid, None),
+                         P(None, None, *mid, "model"), P()]
+            else:
+                cands = [P("data", None, *mid, "model"),
+                         P(None, None, *mid, ("data", "model")),
+                         P(None, None, *mid, "model"), P()]
+        elif opts.activation_mode in ("seq", "megatron") and x.ndim >= 3:
+            cands = [P(b_axes, *rest, "model", None),
+                     P(b_axes, *rest, None, None), P()]
+        elif opts.activation_mode == "tensor":
+            cands = [P(b_axes, *rest, None, "model"),
+                     P(b_axes, *rest, None, None), P()]
+        else:
+            cands = [P(b_axes, *(None,) * (x.ndim - 1)), P()]
+        spec = first_fitting(tuple(x.shape), cands, mesh)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    return shard
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+def named(mesh: Mesh, specs: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def attach(shape_tree: PyTree, specs: PyTree, mesh: Mesh) -> PyTree:
+    """ShapeDtypeStructs with NamedShardings attached (for .lower())."""
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                          sharding=NamedSharding(mesh, s)),
+        shape_tree, specs,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)))

@@ -1,0 +1,149 @@
+"""jit-able train_step / serve_step builders + ShapeDtypeStruct input specs
+for every (architecture x input shape) combination.
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStructs for
+every model input (the dry-run lowers against them — no allocation).
+Decode shapes lower ``serve_step`` (ONE token against a seq_len cache /
+recurrent state); train/prefill shapes lower ``train_step``.
+
+For `long_500k`, full-attention archs are lowered with their
+sliding-window variant (``attn_window = long_context_window``) — the
+sub-quadratic path DESIGN.md §Shape-skips describes; SSM/hybrid archs run
+their native O(1)-state decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs.base import ArchConfig, InputShape
+from repro.launch import sharding as SH
+from repro.models import encdec
+from repro.models.registry import ModelBundle, get_model
+
+PyTree = Any
+
+__all__ = ["variant_for_shape", "input_specs", "make_train_step",
+           "make_serve_step", "abstract_params", "abstract_opt_state",
+           "abstract_decode_state"]
+
+
+def variant_for_shape(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    """Long-context decode on a full-attention arch -> SWA variant."""
+    needs_swa = (shape.name == "long_500k" and cfg.encoder_layers == 0
+                 and "attn" in cfg.block_pattern and cfg.local_window == 0
+                 and cfg.attn_window == 0)
+    if needs_swa:
+        return dataclasses.replace(cfg, attn_window=cfg.long_context_window)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# Abstract (no-allocation) pytrees
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ArchConfig) -> PyTree:
+    m = get_model(cfg)
+    return jax.eval_shape(lambda: m.init(jax.random.PRNGKey(0)))
+
+
+def abstract_opt_state(cfg: ArchConfig, optimizer: optim.Optimizer,
+                       params_shape: PyTree) -> PyTree:
+    return jax.eval_shape(optimizer.init, params_shape)
+
+
+def abstract_decode_state(cfg: ArchConfig, shape: InputShape) -> PyTree:
+    m = get_model(cfg)
+    b = shape.global_batch
+    if m.is_encdec:
+        return jax.eval_shape(
+            lambda: encdec.init_decode_state(cfg, b, shape.seq_len))
+    return jax.eval_shape(
+        lambda: m.init_decode_state(b, shape.seq_len))
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStructs for the step's data inputs."""
+    b = shape.global_batch
+    s = shape.seq_len
+    tok = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), tok),
+                 "labels": jax.ShapeDtypeStruct((b, s), tok)}
+        if cfg.encoder_layers:
+            # enc-dec: frames into the encoder, tokens into the decoder.
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, s, cfg.d_model), jnp.bfloat16)
+        if cfg.fuse_patches:
+            p = max(1, int(s * cfg.patch_frac))
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, p, cfg.d_model), jnp.bfloat16)
+            specs["patch_mask"] = jax.ShapeDtypeStruct((b, s), jnp.bool_)
+        return specs
+    # decode: one new token
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), tok)}
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, mesh, optimizer: optim.Optimizer,
+                    opts: SH.ShardingOptions | None = None,
+                    param_specs=None) -> Callable:
+    m = get_model(cfg)
+    shard = SH.make_shard_fn(mesh, opts)
+
+    def train_step(params, opt_state, batch):
+        def loss(p):
+            return m.loss_fn(p, batch, shard)
+
+        loss_val, grads = jax.value_and_grad(loss)(params)
+        if param_specs is not None:
+            # Pin gradients to the parameter sharding: the backward pass
+            # then emits reduce-scatters into the FSDP layout instead of
+            # full-tensor f32 all-reduces (+slice) — measured 6 GB/step on
+            # the deepseek embed/head grads alone (§Perf it-6).
+            from jax.sharding import NamedSharding
+
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(
+                    g, NamedSharding(mesh, s)), grads, param_specs)
+        updates, opt_state2 = optimizer.update(grads, opt_state, params)
+        params2 = optim.apply_updates(params, updates)
+        return params2, opt_state2, {"loss": loss_val}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, mesh,
+                      opts: SH.ShardingOptions | None = None) -> Callable:
+    """Inference-prefill: forward only, logits for the LAST position only
+    (full-seq 32k x 256k-vocab logits would be a ~0.5 TB tensor)."""
+    from repro.models import encdec, transformer
+
+    shard = SH.make_shard_fn(mesh, opts)
+    fwd = encdec.forward if cfg.encoder_layers else transformer.forward
+
+    def prefill_step(params, batch):
+        logits, _ = fwd(cfg, params, batch, shard, last_only=True)
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, mesh,
+                    opts: SH.ShardingOptions | None = None) -> Callable:
+    m = get_model(cfg)
+    shard = SH.make_shard_fn(mesh, opts)
+
+    def serve_step(params, state, batch):
+        logits, state2 = m.decode_step(params, batch["tokens"], state, shard)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, state2
+
+    return serve_step

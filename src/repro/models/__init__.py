@@ -1,0 +1,2 @@
+"""Model zoo: unified transformer stack + paper CNN/MLP."""
+from repro.models.registry import get_model, ModelBundle

@@ -1,0 +1,298 @@
+"""GQA attention: training (full-causal / sliding-window / bidirectional /
+cross) and single-token decode against a KV cache (full or rolling-window).
+
+Layouts:
+  q (B, S, H, hd)   k/v (B, S, K, hd)   K = n_kv_heads, G = H // K groups.
+  full cache:    {k, v: (B, S_max, K, hd)}  + scalar ``length``
+  rolling cache: {k, v: (B, W, K, hd)}      + scalar ``length`` (absolute)
+
+RoPE is applied at *write* time (keys stored rotated), so decode never
+re-rotates the cache.  Softmax in fp32.  The Pallas flash kernel
+(`repro.kernels.flash_attention`) implements the same contract for the
+training path; `impl="pallas"` routes to it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+PyTree = Any
+
+__all__ = ["AttnConfig", "attn_init", "attention", "decode_step",
+           "init_cache", "multi_query_attention"]
+
+NEG_INF = -2.0 ** 30  # large-negative for masking (bf16-safe)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    window: int = 0            # 0 = full attention; >0 = sliding window
+    causal: bool = True
+    rope_theta: float = 10000.0
+    impl: str = "jnp"          # jnp | pallas
+
+
+def attn_init(rng, cfg: AttnConfig, dtype=jnp.float32,
+              kv_dim: int | None = None) -> PyTree:
+    """kv_dim: source dim for cross-attention K/V (defaults to d_model)."""
+    kv_dim = kv_dim or cfg.d_model
+    ks = jax.random.split(rng, 6)
+    p = {
+        "wq": L.dense_init(ks[0], cfg.d_model, cfg.n_heads * cfg.head_dim,
+                           dtype),
+        "wk": L.dense_init(ks[1], kv_dim, cfg.n_kv_heads * cfg.head_dim,
+                           dtype),
+        "wv": L.dense_init(ks[2], kv_dim, cfg.n_kv_heads * cfg.head_dim,
+                           dtype),
+        "wo": L.dense_init(ks[3], cfg.n_heads * cfg.head_dim, cfg.d_model,
+                           dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.rms_norm_init(cfg.head_dim, dtype)
+        p["k_norm"] = L.rms_norm_init(cfg.head_dim, dtype)
+    return p
+
+
+def _project_qkv(params, cfg: AttnConfig, x, kv_x=None):
+    kv_x = x if kv_x is None else kv_x
+    b, s = x.shape[:2]
+    sk = kv_x.shape[1]
+    q = (x @ params["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = (kv_x @ params["wk"]).reshape(b, sk, cfg.n_kv_heads, cfg.head_dim)
+    v = (kv_x @ params["wv"]).reshape(b, sk, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, params["q_norm"])
+        k = L.rms_norm(k, params["k_norm"])
+    return q, k, v
+
+
+def _expand_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B, S, K, hd) -> (B, S, K*G, hd) by repeat (GQA group expansion)."""
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool, window: int = 0,
+                      chunk: int = 512) -> jax.Array:
+    """Flash-style online-softmax attention in pure jnp (lax.scan over KV
+    chunks).  Peak memory is O(S * chunk) instead of O(S^2) — the memory
+    lever for the 32k prefill / 4k x 95-layer train shapes
+    (EXPERIMENTS.md §Perf it-2).  Same contract as the einsum path.
+    """
+    b, s, h, hd = q.shape
+    skv = k.shape[1]
+    c = min(chunk, skv)
+    if skv % c:
+        return multi_query_attention(
+            q, k, v, _structural_mask(s, skv, causal, window), "jnp")
+    n = skv // c
+    scale = hd ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    qpos = jnp.arange(s)[:, None]
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        kc, vc, start = inp
+        sij = jnp.einsum("bshd,bthd->bhst", qf, kc.astype(jnp.float32))
+        kpos = start + jnp.arange(c)[None, :]
+        mask = jnp.ones((s, c), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= (qpos - kpos) < window
+        sij = jnp.where(mask[None, None], sij, NEG_INF)
+        m_cur = jnp.max(sij, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(sij - m_new[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhst,bthd->bhsd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    ks = k.reshape(b, n, c, h, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, n, c, h, hd).transpose(1, 0, 2, 3, 4)
+    starts = jnp.arange(n) * c
+    m0 = jnp.full((b, h, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    a0 = jnp.zeros((b, h, s, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (ks, vs, starts))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def _structural_mask(s: int, skv: int, causal: bool, window: int):
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(skv)[None, :]
+    m = jnp.ones((s, skv), bool)
+    if causal:
+        m &= j <= i
+    if window:
+        m &= (i - j) < window
+    return m[None, None]
+
+
+def multi_query_attention(q, k, v, mask, impl: str = "jnp") -> jax.Array:
+    """Core attention.  q (B,S,H,hd), k/v (B,Sk,H,hd), mask (B|1,1|H,S,Sk)."""
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bshd,bthd->bhst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def _train_mask(cfg: AttnConfig, s: int, sk: int) -> jax.Array:
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(sk)[None, :]
+    if not cfg.causal:
+        return jnp.ones((1, 1, s, sk), bool)
+    m = j <= i
+    if cfg.window:
+        m &= (i - j) < cfg.window
+    return m[None, None]
+
+
+def attention(params: PyTree, cfg: AttnConfig, x: jax.Array,
+              positions: jax.Array | None = None,
+              kv_x: jax.Array | None = None,
+              mask: jax.Array | None = None) -> jax.Array:
+    """Training/prefill path.  ``x (B, S, d)`` -> ``(B, S, d)``.
+
+    ``kv_x`` switches to cross-attention (no causal mask, no rope on kv by
+    default — enc-dec style).
+    """
+    b, s = x.shape[:2]
+    q, k, v = _project_qkv(params, cfg, x, kv_x)
+    is_cross = kv_x is not None
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    if not is_cross:
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+    groups = cfg.n_heads // cfg.n_kv_heads
+    k = _expand_kv(k, groups)
+    v = _expand_kv(v, groups)
+    if cfg.impl == "pallas" and mask is None:
+        # Structural (causal/window) masks route to the flash kernel.
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.flash_attention(q, k, v,
+                                     causal=cfg.causal and not is_cross,
+                                     window=cfg.window)
+    elif cfg.impl == "chunked" and mask is None:
+        out = chunked_attention(q, k, v, causal=cfg.causal and not is_cross,
+                                window=cfg.window)
+    else:
+        if mask is None:
+            mcfg = dataclasses.replace(cfg,
+                                       causal=cfg.causal and not is_cross)
+            mask = _train_mask(mcfg, s, k.shape[1])
+        out = multi_query_attention(q, k, v, mask, cfg.impl)
+    return out.reshape(b, s, -1) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16
+               ) -> PyTree:
+    """Cache pytree.  For SWA (cfg.window>0) the cache is the rolling window."""
+    size = min(max_len, cfg.window) if cfg.window else max_len
+    shape = (batch, size, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step(params: PyTree, cfg: AttnConfig, x: jax.Array,
+                cache: PyTree, length: jax.Array,
+                shard=None) -> tuple[jax.Array, PyTree]:
+    """One decode step.  ``x (B, 1, d)``, ``length`` = #tokens already cached.
+
+    Returns (out (B, 1, d), new_cache).  Keys are stored pre-rotated.
+    ``shard(x, name)`` hints keep the cache and the attention logits
+    sharded along the cache's partitioned axis — without them XLA SPMD
+    falls back to all-gathering the full cache per layer per step
+    (measured: 2 x 1 GB f32 gathers per layer, §Perf it-4).
+    """
+    shard = shard or (lambda t, name: t)
+    b = x.shape[0]
+    q, k, v = _project_qkv(params, cfg, x)
+    pos = jnp.full((b, 1), length, dtype=jnp.int32)
+    q = L.rope(q, pos, cfg.rope_theta)
+    k = L.rope(k, pos, cfg.rope_theta)
+
+    size = cache["k"].shape[1]
+    slot = (length % size) if cfg.window else length
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    ck = shard(ck, "kv_cache")
+    cv = shard(cv, "kv_cache")
+
+    idx = jnp.arange(size)
+    if cfg.window:
+        valid = (idx <= slot) | (length >= size)   # rolling window occupancy
+    else:
+        valid = idx <= length
+    mask = valid[None, None, None, :]              # (1, 1, 1, size)
+
+    # Grouped-head attention WITHOUT materializing the G-expanded KV
+    # (repeat would read/write 4x the cache bytes at GQA G=4; §Perf it-5).
+    groups = cfg.n_heads // cfg.n_kv_heads
+    scale = q.shape[-1] ** -0.5
+    qg = q.reshape(b, 1, cfg.n_kv_heads, groups, cfg.head_dim)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, ck,
+                        preferred_element_type=jnp.float32) * scale
+    # The :K suffix tells the shard-rule whether kv-head sharding is in
+    # play (K divides the model axis) or the cache is seq-sharded.
+    logits = shard(jnp.where(mask[:, None], logits, NEG_INF),
+                   f"attn_logits:{cfg.n_kv_heads}")
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, cv)
+    out = out.reshape(b, 1, -1) @ params["wo"]
+    return out, {"k": ck, "v": cv}
+
+
+def cross_decode(params: PyTree, cfg: AttnConfig, x: jax.Array,
+                 memory_k: jax.Array, memory_v: jax.Array) -> jax.Array:
+    """Cross-attention decode against precomputed encoder memory K/V.
+
+    ``memory_k/v (B, S_src, K, hd)`` are computed once at prefill from the
+    encoder output and reused every step.
+    """
+    b = x.shape[0]
+    q = (x @ params["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, params["q_norm"])
+    groups = cfg.n_heads // cfg.n_kv_heads
+    kk = _expand_kv(memory_k, groups)
+    vv = _expand_kv(memory_v, groups)
+    mask = jnp.ones((1, 1, 1, kk.shape[1]), bool)
+    out = multi_query_attention(q, kk, vv, mask, cfg.impl)
+    return out.reshape(b, 1, -1) @ params["wo"]
+
+
+def memory_kv(params: PyTree, cfg: AttnConfig, memory: jax.Array
+              ) -> tuple[jax.Array, jax.Array]:
+    """Precompute cross-attention K/V from encoder output ``memory (B,S,d)``."""
+    b, s = memory.shape[:2]
+    k = (memory @ params["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (memory @ params["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        k = L.rms_norm(k, params["k_norm"])
+    return k, v

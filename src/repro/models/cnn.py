@@ -1,0 +1,96 @@
+"""The paper's CIFAR-10 CNN (§III "Datasets and Models").
+
+Two 5x5 conv layers, two 2x2 max-pools, FC(120), FC(84), softmax head,
+cross-entropy loss.  The two conv layers are the *common representation*
+shared through the GPS (paper Fig. 2 setup); the FC stack + head are
+task-specific.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = ["PaperCNNConfig", "init", "apply", "loss_fn", "accuracy",
+           "COMMON_PREFIXES"]
+
+COMMON_PREFIXES = ("conv1", "conv2")
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperCNNConfig:
+    image_hw: tuple[int, int, int] = (32, 32, 3)
+    c1: int = 6
+    c2: int = 16
+    fc1: int = 120
+    fc2: int = 84
+    n_classes: int = 10
+
+
+def _he(rng, shape, fan_in):
+    return jax.random.normal(rng, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def init(cfg: PaperCNNConfig, rng: jax.Array) -> PyTree:
+    h, w, c = cfg.image_hw
+    k = jax.random.split(rng, 5)
+    # Spatial size after two valid 5x5 convs + 2x2 pools.
+    s1 = ((h - 4) // 2, (w - 4) // 2)
+    s2 = ((s1[0] - 4) // 2, (s1[1] - 4) // 2)
+    flat = s2[0] * s2[1] * cfg.c2
+    return {
+        "conv1": {"w": _he(k[0], (5, 5, c, cfg.c1), 25 * c),
+                  "b": jnp.zeros((cfg.c1,))},
+        "conv2": {"w": _he(k[1], (5, 5, cfg.c1, cfg.c2), 25 * cfg.c1),
+                  "b": jnp.zeros((cfg.c2,))},
+        "fc1": {"w": _he(k[2], (flat, cfg.fc1), flat),
+                "b": jnp.zeros((cfg.fc1,))},
+        "fc2": {"w": _he(k[3], (cfg.fc1, cfg.fc2), cfg.fc1),
+                "b": jnp.zeros((cfg.fc2,))},
+        "head": {"w": _he(k[4], (cfg.fc2, cfg.n_classes), cfg.fc2),
+                 "b": jnp.zeros((cfg.n_classes,))},
+    }
+
+
+def _conv(x, w, b):
+    dn = jax.lax.conv_dimension_numbers(x.shape, w.shape,
+                                        ("NHWC", "HWIO", "NHWC"))
+    return jax.lax.conv_general_dilated(x, w, (1, 1), "VALID",
+                                        dimension_numbers=dn) + b
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def apply(cfg: PaperCNNConfig, params: PyTree, x_flat: jax.Array) -> jax.Array:
+    """``x_flat (B, m)`` -> logits ``(B, n_classes)``."""
+    h, w, c = cfg.image_hw
+    x = x_flat.reshape((-1, h, w, c))
+    x = _maxpool2(jax.nn.relu(_conv(x, params["conv1"]["w"],
+                                    params["conv1"]["b"])))
+    x = _maxpool2(jax.nn.relu(_conv(x, params["conv2"]["w"],
+                                    params["conv2"]["b"])))
+    x = x.reshape((x.shape[0], -1))
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    x = jax.nn.relu(x @ params["fc2"]["w"] + params["fc2"]["b"])
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+def loss_fn(cfg: PaperCNNConfig):
+    def f(params: PyTree, batch: dict) -> jax.Array:
+        logits = apply(cfg, params, batch["x"])
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=1)
+        return jnp.mean(nll)
+    return f
+
+
+def accuracy(cfg: PaperCNNConfig, params: PyTree, x, y) -> float:
+    logits = apply(cfg, params, x)
+    return float(jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32)))

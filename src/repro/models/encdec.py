@@ -1,0 +1,226 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The modality frontend (mel-spectrogram + conv feature extractor) is a STUB
+per the assignment carve-out: ``batch["frames"] (B, S_src, d_model)`` are
+precomputed frame embeddings.  The encoder is a bidirectional transformer
+over frames; the decoder is a causal transformer with cross-attention.
+
+Decode: ``encode()`` runs once; per-layer cross-attention K/V are
+precomputed from the encoder output (``decode_state_from_memory``) and the
+decoder then generates one token per ``decode_step`` against (a) the cross
+memory of length S_src and (b) its own self-attention cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import layers as L
+
+PyTree = Any
+ShardFn = Callable[[jax.Array, str], jax.Array]
+
+__all__ = ["init", "forward", "loss_fn", "encode", "init_decode_state",
+           "decode_step"]
+
+
+def _dt(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+def _id_shard(x, name):
+    del name
+    return x
+
+
+def _acfg(cfg: ArchConfig, causal: bool) -> A.AttnConfig:
+    return A.AttnConfig(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                        qk_norm=cfg.qk_norm, causal=causal,
+                        rope_theta=cfg.rope_theta, impl=cfg.attn_impl)
+
+
+def _enc_block_init(cfg, rng, dtype):
+    ks = jax.random.split(rng, 2)
+    return {"ln1": L.rms_norm_init(cfg.d_model, dtype),
+            "attn": A.attn_init(ks[0], _acfg(cfg, False), dtype),
+            "ln2": L.rms_norm_init(cfg.d_model, dtype),
+            "ffn": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                              cfg.mlp_variant, dtype)}
+
+
+def _dec_block_init(cfg, rng, dtype):
+    ks = jax.random.split(rng, 3)
+    return {"ln1": L.rms_norm_init(cfg.d_model, dtype),
+            "self": A.attn_init(ks[0], _acfg(cfg, True), dtype),
+            "ln2": L.rms_norm_init(cfg.d_model, dtype),
+            "cross": A.attn_init(ks[1], _acfg(cfg, False), dtype),
+            "ln3": L.rms_norm_init(cfg.d_model, dtype),
+            "ffn": L.mlp_init(ks[2], cfg.d_model, cfg.d_ff,
+                              cfg.mlp_variant, dtype)}
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init(cfg: ArchConfig, rng: jax.Array) -> PyTree:
+    dtype = _dt(cfg.param_dtype)
+    n_enc, n_dec = cfg.encoder_layers, cfg.n_layers
+    keys = jax.random.split(rng, 4 + n_enc + n_dec)
+    return {
+        "frame_proj": L.dense_init(keys[0], cfg.d_model, cfg.d_model, dtype),
+        "embed": L.embed_init(keys[1], cfg.vocab, cfg.d_model, dtype),
+        "enc": _stack([_enc_block_init(cfg, keys[4 + i], dtype)
+                       for i in range(n_enc)]),
+        "enc_norm": L.rms_norm_init(cfg.d_model, dtype),
+        "dec": _stack([_dec_block_init(cfg, keys[4 + n_enc + i], dtype)
+                       for i in range(n_dec)]),
+        "final_norm": L.rms_norm_init(cfg.d_model, dtype),
+        "head": L.dense_init(keys[2], cfg.d_model, cfg.vocab, dtype),
+    }
+
+
+def encode(cfg: ArchConfig, params: PyTree, frames: jax.Array,
+           shard: ShardFn = _id_shard) -> jax.Array:
+    h = (frames.astype(_dt(cfg.act_dtype)) @ params["frame_proj"])
+    h = shard(h, "activation")
+    b, s = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    acfg = _acfg(cfg, False)
+
+    def body(h, bp):
+        a = A.attention(bp["attn"], acfg, L.rms_norm(h, bp["ln1"]), positions)
+        h = h + shard(a, "residual")
+        f = L.mlp_apply(bp["ffn"], L.rms_norm(h, bp["ln2"]), cfg.mlp_variant)
+        return h + shard(f, "residual"), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        h, _ = jax.lax.scan(fn, h, params["enc"])
+    else:
+        for i in range(cfg.encoder_layers):
+            h, _ = fn(h, jax.tree.map(lambda x: x[i], params["enc"]))
+    return L.rms_norm(h, params["enc_norm"])
+
+
+def forward(cfg: ArchConfig, params: PyTree, batch: dict,
+            shard: ShardFn = _id_shard, last_only: bool = False
+            ) -> tuple[jax.Array, jax.Array]:
+    memory = encode(cfg, params, batch["frames"], shard)
+    h = jnp.take(params["embed"], batch["tokens"], axis=0)
+    h = shard(h.astype(_dt(cfg.act_dtype)), "activation")
+    b, s = batch["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    self_cfg = _acfg(cfg, True)
+    cross_cfg = _acfg(cfg, False)
+
+    def body(h, bp):
+        a = A.attention(bp["self"], self_cfg, L.rms_norm(h, bp["ln1"]),
+                        positions)
+        h = h + shard(a, "residual")
+        c = A.attention(bp["cross"], cross_cfg, L.rms_norm(h, bp["ln2"]),
+                        positions, kv_x=memory)
+        h = h + shard(c, "residual")
+        f = L.mlp_apply(bp["ffn"], L.rms_norm(h, bp["ln3"]), cfg.mlp_variant)
+        return h + shard(f, "residual"), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        h, _ = jax.lax.scan(fn, h, params["dec"])
+    else:
+        for i in range(cfg.n_layers):
+            h, _ = fn(h, jax.tree.map(lambda x: x[i], params["dec"]))
+    if last_only:
+        h = h[:, -1:, :]
+    h = L.rms_norm(h, params["final_norm"])
+    logits = shard(h @ params["head"], "logits")
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ArchConfig, params: PyTree, batch: dict,
+            shard: ShardFn = _id_shard) -> jax.Array:
+    logits, _ = forward(cfg, params, batch, shard)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ArchConfig, batch: int, src_len: int,
+                      self_len: int = 1024) -> PyTree:
+    """Decode state with UNINITIALIZED cross memory (dry-run shape source).
+
+    ``decode_state_from_memory`` fills ``mem_k/mem_v`` from a real encoder
+    pass.
+    """
+    dtype = _dt(cfg.act_dtype)
+    n_dec = cfg.n_layers
+    kv = (n_dec, batch, src_len, cfg.n_kv_heads, cfg.head_dim)
+    self_cache = _stack([A.init_cache(_acfg(cfg, True), batch, self_len,
+                                      dtype) for _ in range(n_dec)])
+    return {"mem_k": jnp.zeros(kv, dtype), "mem_v": jnp.zeros(kv, dtype),
+            "self": self_cache, "length": jnp.zeros((), jnp.int32)}
+
+
+def decode_state_from_memory(cfg: ArchConfig, params: PyTree,
+                             memory: jax.Array, self_len: int = 1024
+                             ) -> PyTree:
+    cross_cfg = _acfg(cfg, False)
+
+    def kv(bp):
+        return A.memory_kv(bp["cross"], cross_cfg, memory)
+
+    mem_k, mem_v = jax.vmap(kv, in_axes=(0,))(params["dec"])
+    state = init_decode_state(cfg, memory.shape[0], memory.shape[1])
+    state["mem_k"], state["mem_v"] = mem_k.astype(state["mem_k"].dtype), \
+        mem_v.astype(state["mem_v"].dtype)
+    return state
+
+
+def decode_step(cfg: ArchConfig, params: PyTree, tokens: jax.Array,
+                state: PyTree, shard: ShardFn = _id_shard
+                ) -> tuple[jax.Array, PyTree]:
+    h = jnp.take(params["embed"], tokens, axis=0).astype(_dt(cfg.act_dtype))
+    h = shard(h, "activation")
+    length = state["length"]
+    self_cfg = _acfg(cfg, True)
+    cross_cfg = _acfg(cfg, False)
+
+    def body(h, inp):
+        bp, cache, mk, mv = inp
+        a, new_cache = A.decode_step(bp["self"], self_cfg,
+                                     L.rms_norm(h, bp["ln1"]), cache, length)
+        h = h + a
+        c = A.cross_decode(bp["cross"], cross_cfg,
+                           L.rms_norm(h, bp["ln2"]), mk, mv)
+        h = h + c
+        f = L.mlp_apply(bp["ffn"], L.rms_norm(h, bp["ln3"]), cfg.mlp_variant)
+        return h + f, new_cache
+
+    if cfg.scan_layers:
+        h, new_self = jax.lax.scan(
+            body, h, (params["dec"], state["self"], state["mem_k"],
+                      state["mem_v"]))
+    else:
+        caches = []
+        for i in range(cfg.n_layers):
+            sl = jax.tree.map(lambda x: x[i],
+                              (params["dec"], state["self"],
+                               state["mem_k"], state["mem_v"]))
+            h, c = body(h, sl)
+            caches.append(c)
+        new_self = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    new_state = dict(state)
+    new_state["self"] = new_self
+    new_state["length"] = length + 1
+    h = L.rms_norm(h, params["final_norm"])
+    logits = shard(h @ params["head"], "logits")
+    return logits, new_state

@@ -1,0 +1,90 @@
+"""Shared transformer building blocks (pure JAX, pytree params).
+
+Conventions:
+  * params are nested dicts of arrays; stacked-layer params carry a leading
+    ``L`` axis and are consumed by ``jax.lax.scan``.
+  * activations run in ``cfg.act_dtype`` (bf16 by default), norms/softmax
+    accumulate in fp32.
+  * initializers take an explicit rng and fan-in; everything deterministic.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = ["rms_norm", "rms_norm_init", "dense_init", "mlp_init", "mlp_apply",
+           "embed_init", "rope", "trunc_normal"]
+
+
+def trunc_normal(rng, shape, std, dtype=jnp.float32):
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def dense_init(rng, d_in: int, d_out: int, dtype=jnp.float32) -> jax.Array:
+    return trunc_normal(rng, (d_in, d_out), (2.0 / (d_in + d_out)) ** 0.5,
+                        dtype)
+
+
+def embed_init(rng, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return trunc_normal(rng, (vocab, d), d ** -0.5, dtype)
+
+
+def rms_norm_init(d: int, dtype=jnp.float32) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(rng, d_model: int, d_ff: int, variant: str = "swiglu",
+             dtype=jnp.float32) -> PyTree:
+    ks = jax.random.split(rng, 3)
+    p = {"w_up": dense_init(ks[0], d_model, d_ff, dtype),
+         "w_down": dense_init(ks[1], d_ff, d_model, dtype)}
+    if variant == "swiglu":
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp_apply(params: PyTree, x: jax.Array, variant: str = "swiglu"
+              ) -> jax.Array:
+    up = x @ params["w_up"]
+    if variant == "swiglu":
+        gate = jax.nn.silu(x @ params["w_gate"])
+        h = gate * up
+    else:  # gelu
+        h = jax.nn.gelu(up)
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0
+         ) -> jax.Array:
+    """Apply RoPE.  ``x (..., S, H, hd)``, ``positions (..., S)``."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq       # (..., S, half)
+    ang = ang[..., None, :]                                     # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,57 @@
+"""The paper's Fashion-MNIST MLP (§III).
+
+FC(784->32) + ReLU, FC(32->C) + log-softmax, NLL loss.  The first layer is
+the common representation in the 3-task experiment (Fig. 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = ["PaperMLPConfig", "init", "apply", "loss_fn", "accuracy",
+           "COMMON_PREFIXES"]
+
+COMMON_PREFIXES = ("fc1",)
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperMLPConfig:
+    m: int = 784
+    hidden: int = 32
+    n_classes: int = 10
+
+
+def init(cfg: PaperMLPConfig, rng: jax.Array) -> PyTree:
+    k1, k2 = jax.random.split(rng)
+    s1 = jnp.sqrt(2.0 / cfg.m)
+    s2 = jnp.sqrt(2.0 / cfg.hidden)
+    return {
+        "fc1": {"w": jax.random.normal(k1, (cfg.m, cfg.hidden)) * s1,
+                "b": jnp.zeros((cfg.hidden,))},
+        "head": {"w": jax.random.normal(k2, (cfg.hidden, cfg.n_classes)) * s2,
+                 "b": jnp.zeros((cfg.n_classes,))},
+    }
+
+
+def apply(cfg: PaperMLPConfig, params: PyTree, x: jax.Array) -> jax.Array:
+    h = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return h @ params["head"]["w"] + params["head"]["b"]
+
+
+def loss_fn(cfg: PaperMLPConfig):
+    def f(params: PyTree, batch: dict) -> jax.Array:
+        logits = apply(cfg, params, batch["x"])
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=1)
+        return jnp.mean(nll)
+    return f
+
+
+def accuracy(cfg: PaperMLPConfig, params: PyTree, x, y) -> float:
+    logits = apply(cfg, params, x)
+    return float(jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32)))

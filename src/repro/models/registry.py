@@ -1,0 +1,58 @@
+"""Model registry: dispatch an ArchConfig to its stack (decoder / enc-dec)
+and expose a uniform bundle used by launcher, dry-run, and smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, transformer
+
+PyTree = Any
+
+__all__ = ["ModelBundle", "get_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ArchConfig
+    init: Callable
+    forward: Callable          # (params, batch, shard) -> (logits, aux)
+    loss_fn: Callable          # (params, batch, shard) -> scalar
+    init_decode_state: Callable
+    decode_step: Callable      # (params, tokens, state, shard) -> (logits, st)
+    is_encdec: bool
+
+
+def get_model(cfg: ArchConfig) -> ModelBundle:
+    if cfg.encoder_layers > 0:
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda rng: encdec.init(cfg, rng),
+            forward=lambda p, b, s=None: encdec.forward(
+                cfg, p, b, s or (lambda x, n: x)),
+            loss_fn=lambda p, b, s=None: encdec.loss_fn(
+                cfg, p, b, s or (lambda x, n: x)),
+            init_decode_state=lambda batch, max_len: encdec.init_decode_state(
+                cfg, batch, max_len),
+            decode_step=lambda p, t, st, s=None: encdec.decode_step(
+                cfg, p, t, st, s or (lambda x, n: x)),
+            is_encdec=True,
+        )
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda rng: transformer.init(cfg, rng),
+        forward=lambda p, b, s=None: transformer.forward(
+            cfg, p, b, s or (lambda x, n: x)),
+        loss_fn=lambda p, b, s=None: transformer.loss_fn(
+            cfg, p, b, s or (lambda x, n: x)),
+        init_decode_state=lambda batch, max_len: transformer.init_decode_state(
+            cfg, batch, max_len),
+        decode_step=lambda p, t, st, s=None: transformer.decode_step(
+            cfg, p, t, st, s or (lambda x, n: x)),
+        is_encdec=False,
+    )

@@ -1,0 +1,133 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)                 # recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)                 # input gate
+    log a_t = -c * r_t * softplus(Lambda)        # a_t = a^(c r_t), a=sig(-L)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses ``jax.lax.associative_scan`` (log-depth on TPU) over the
+linear recurrence; decode is the O(1) single-step update.  The full
+"recurrent block" wraps the RG-LRU with a causal depthwise conv1d (width 4)
+and a GeGLU-style gating branch, as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+PyTree = Any
+
+__all__ = ["RGLRUConfig", "rglru_block_init", "rglru_block_apply",
+           "rglru_block_step", "init_rglru_state"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int = 0             # defaults to d_model
+    conv_width: int = 4
+    c: float = 8.0
+
+    @property
+    def rnn_dim(self) -> int:
+        return self.d_rnn or self.d_model
+
+
+def rglru_block_init(rng, cfg: RGLRUConfig, dtype=jnp.float32) -> PyTree:
+    d, dr = cfg.d_model, cfg.rnn_dim
+    ks = jax.random.split(rng, 7)
+    # Lambda init so that a = sigmoid(Lambda) in (0.9, 0.999) (paper init).
+    lam = jnp.log(jnp.exp(jnp.linspace(2.2, 6.9, dr)) - 1.0)  # inv softplus
+    return {
+        "w_in_x": L.dense_init(ks[0], d, dr, dtype),
+        "w_in_y": L.dense_init(ks[1], d, dr, dtype),
+        "conv_w": L.trunc_normal(ks[2], (cfg.conv_width, dr),
+                                 (1.0 / cfg.conv_width) ** 0.5, dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_a": L.dense_init(ks[3], dr, dr, dtype),
+        "b_a": jnp.zeros((dr,), dtype),
+        "w_i": L.dense_init(ks[4], dr, dr, dtype),
+        "b_i": jnp.zeros((dr,), dtype),
+        "lam": lam.astype(dtype),
+        "w_out": L.dense_init(ks[5], dr, d, dtype),
+    }
+
+
+def _gates(params, u):
+    """u (B, S, dr) -> (log_a, gated input) both fp32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ params["w_a"].astype(jnp.float32)
+                       + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ params["w_i"].astype(jnp.float32)
+                       + params["b_i"].astype(jnp.float32))
+    log_a = -8.0 * r * jax.nn.softplus(params["lam"].astype(jnp.float32))
+    a2 = jnp.exp(2.0 * log_a)
+    x_in = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * uf)
+    return log_a, x_in
+
+
+def _conv1d_causal(params, u, conv_state=None):
+    """Depthwise causal conv, width W.  conv_state (B, W-1, dr) carries
+    context across calls (decode)."""
+    w = params["conv_w"].astype(u.dtype)            # (W, dr)
+    width = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((u.shape[0], width - 1, u.shape[2]), u.dtype)
+    else:
+        pad = conv_state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)        # (B, S+W-1, dr)
+    out = sum(full[:, i : i + u.shape[1], :] * w[i] for i in range(width))
+    new_state = full[:, -(width - 1):, :]
+    return out + params["conv_b"].astype(u.dtype), new_state
+
+
+def init_rglru_state(cfg: RGLRUConfig, batch: int, dtype=jnp.float32) -> PyTree:
+    return {
+        "h": jnp.zeros((batch, cfg.rnn_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.rnn_dim), dtype),
+    }
+
+
+def rglru_block_apply(params: PyTree, cfg: RGLRUConfig, x: jax.Array,
+                      state: PyTree | None = None
+                      ) -> tuple[jax.Array, PyTree]:
+    """Training/prefill.  ``x (B, S, d)`` -> (y (B, S, d), new state)."""
+    b, s, _ = x.shape
+    if state is None:
+        state = init_rglru_state(cfg, b)
+    y_branch = jax.nn.gelu(x @ params["w_in_y"])
+    u = x @ params["w_in_x"]
+    u, conv_state = _conv1d_causal(params, u, state["conv"])
+    log_a, x_in = _gates(params, u)
+
+    # h_t = exp(log_a_t) h_{t-1} + x_in_t  via associative scan, with the
+    # incoming carry folded into the first element.
+    x_in = x_in.at[:, 0, :].add(jnp.exp(log_a[:, 0, :]) * state["h"])
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 + a2, jnp.exp(a2) * b1 + b2
+
+    log_acc, h = jax.lax.associative_scan(combine, (log_a, x_in), axis=1)
+    out = (h.astype(x.dtype) * y_branch) @ params["w_out"]
+    new_state = {"h": h[:, -1, :], "conv": conv_state}
+    return out, new_state
+
+
+def rglru_block_step(params: PyTree, cfg: RGLRUConfig, x: jax.Array,
+                     state: PyTree) -> tuple[jax.Array, PyTree]:
+    """Decode: ``x (B, 1, d)`` with O(1) state."""
+    y_branch = jax.nn.gelu(x @ params["w_in_y"])
+    u = x @ params["w_in_x"]
+    u, conv_state = _conv1d_causal(params, u, state["conv"])
+    log_a, x_in = _gates(params, u)
+    h = jnp.exp(log_a[:, 0, :]) * state["h"] + x_in[:, 0, :]
+    out = (h[:, None, :].astype(x.dtype) * y_branch) @ params["w_out"]
+    return out, {"h": h, "conv": conv_state}

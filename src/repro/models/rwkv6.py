@@ -1,0 +1,262 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): data-dependent token-shift and
+per-channel data-dependent decay, attention-free.
+
+Time-mix recurrence per head (key dim hd_k = value dim hd_v = 64):
+
+    a_t   = k_t v_t^T                      (rank-1 update)
+    o_t   = r_t (S_t + diag(u) a_t)        (readout w/ bonus on current)
+    S_t+1 = diag(w_t) S_t + a_t            (data-dependent diagonal decay)
+
+Three implementations with one contract:
+  * ``time_mix_ref``    : lax.scan over time — the oracle.
+  * ``time_mix_chunked``: TPU-native chunked form — intra-chunk pairwise
+    decay ratios ``exp(cumlog[t-1]-cumlog[s]) <= 1`` (computed as log
+    differences so nothing overflows), inter-chunk state carried by a scan
+    over chunks.  This turns the sequential recurrence into MXU matmuls —
+    the hardware adaptation of the paper-pool's GPU WKV kernel (DESIGN.md §5).
+  * ``time_mix_step``   : single-token decode (O(1) state).
+
+Channel-mix is the RWKV squared-ReLU FFN with token shift.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+PyTree = Any
+
+__all__ = ["RWKVConfig", "rwkv_block_init", "rwkv_block_apply",
+           "rwkv_block_step", "init_rwkv_state", "time_mix_ref",
+           "time_mix_chunked"]
+
+MIX_NAMES = ("r", "k", "v", "w", "g")
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    d_model: int
+    d_ff: int
+    head_dim: int = 64
+    lora_mix: int = 32          # rank of the token-shift ddlerp LoRA
+    lora_decay: int = 64        # rank of the decay LoRA
+    chunk: int = 64             # chunk length for the parallel form
+    impl: str = "chunked"       # chunked | scan (oracle)
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def rwkv_block_init(rng, cfg: RWKVConfig, dtype=jnp.float32) -> PyTree:
+    d, hd = cfg.d_model, cfg.head_dim
+    h = cfg.n_heads
+    ks = jax.random.split(rng, 16)
+    u_init = jnp.linspace(-1.0, 1.0, hd, dtype=jnp.float32)
+    return {
+        "time": {
+            "mu_x": jnp.full((d,), 0.5, dtype),
+            "mu": jnp.full((5, d), 0.5, dtype),
+            "mix_a1": L.dense_init(ks[0], d, 5 * cfg.lora_mix, dtype),
+            "mix_a2": L.trunc_normal(ks[1], (5, cfg.lora_mix, d), 0.01, dtype),
+            "w0": jnp.full((d,), -2.0, dtype),   # decay bias (pre -exp(exp))
+            "w_a1": L.dense_init(ks[2], d, cfg.lora_decay, dtype),
+            "w_a2": L.trunc_normal(ks[3], (cfg.lora_decay, d), 0.01, dtype),
+            "u": jnp.tile(u_init[None, :], (h, 1)).astype(dtype),
+            "wr": L.dense_init(ks[4], d, d, dtype),
+            "wk": L.dense_init(ks[5], d, d, dtype),
+            "wv": L.dense_init(ks[6], d, d, dtype),
+            "wg": L.dense_init(ks[7], d, d, dtype),
+            "wo": L.dense_init(ks[8], d, d, dtype),
+            "ln_x": L.rms_norm_init(d, dtype),
+        },
+        "channel": {
+            "mu_k": jnp.full((d,), 0.5, dtype),
+            "mu_r": jnp.full((d,), 0.5, dtype),
+            "wk": L.dense_init(ks[9], d, cfg.d_ff, dtype),
+            "wv": L.dense_init(ks[10], cfg.d_ff, d, dtype),
+            "wr": L.dense_init(ks[11], d, d, dtype),
+        },
+        "ln1": L.rms_norm_init(d, dtype),
+        "ln2": L.rms_norm_init(d, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Token shift + projections
+# ---------------------------------------------------------------------------
+
+def _shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """Sequence-shift: y_t = x_{t-1}; y_0 = prev (carry from last step)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _ddlerp(tp: PyTree, x: jax.Array, x_prev_tok: jax.Array
+            ) -> dict[str, jax.Array]:
+    """Data-dependent token-shift mix for the five branches (Finch eq. 2-4)."""
+    xx = x_prev_tok - x
+    xbase = x + xx * tp["mu_x"]
+    lora = jnp.tanh(xbase @ tp["mix_a1"])                     # (B,S,5*r)
+    b, s, _ = lora.shape
+    lora = lora.reshape(b, s, 5, -1)
+    delta = jnp.einsum("bsnr,nrd->bsnd", lora, tp["mix_a2"])  # (B,S,5,d)
+    out = {}
+    for i, name in enumerate(MIX_NAMES):
+        mix = tp["mu"][i] + delta[:, :, i, :]
+        out[name] = x + xx * mix
+    return out
+
+
+def _rkvwg(tp: PyTree, mixed: dict, h: int, hd: int):
+    """Project the mixed branches -> per-head r, k, v, decay logs, gate."""
+    b, s, d = mixed["r"].shape
+    r = (mixed["r"] @ tp["wr"]).reshape(b, s, h, hd)
+    k = (mixed["k"] @ tp["wk"]).reshape(b, s, h, hd)
+    v = (mixed["v"] @ tp["wv"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(mixed["g"] @ tp["wg"])
+    w_raw = tp["w0"] + jnp.tanh(mixed["w"] @ tp["w_a1"]) @ tp["w_a2"]
+    # log-decay in (-inf, 0): log w = -exp(w_raw)  (w = exp(-exp(raw)))
+    logw = -jnp.exp(jnp.clip(w_raw.astype(jnp.float32), -8.0, 5.0))
+    logw = logw.reshape(b, s, h, hd)
+    return r, k, v, logw, g
+
+
+# ---------------------------------------------------------------------------
+# WKV6 core: three equivalent implementations
+# ---------------------------------------------------------------------------
+
+def time_mix_ref(r, k, v, logw, u, state):
+    """Oracle: scan over time.  r/k/v/logw (B,S,H,hd), u (H,hd),
+    state (B,H,hd,hd).  Returns (out (B,S,H,hd), final state)."""
+
+    def step(s_prev, inp):
+        r_t, k_t, v_t, lw_t = inp                       # (B,H,hd)
+        a = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        o = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       s_prev + u[None, :, :, None] * a)
+        s_new = jnp.exp(lw_t)[..., None] * s_prev + a
+        return s_new, o
+
+    rs, ks_, vs, lws = (jnp.moveaxis(t, 1, 0) for t in (r, k, v, logw))
+    state, outs = jax.lax.scan(step, state, (rs, ks_, vs, lws))
+    return jnp.moveaxis(outs, 0, 1), state
+
+
+def time_mix_chunked(r, k, v, logw, u, state, chunk: int = 64):
+    """Chunked parallel form (matmul-dominant, overflow-safe).
+
+    Within a chunk of length C (fp32):
+      cum[t]  = sum_{s<=t} logw_s                       (per key dim)
+      inter-token weight A[t,s,d] = exp(cum[t-1]-cum[s]) for s<t  (<=1)
+      state passthrough uses exp(cum[t-1]) (<=1)
+      chunk state update uses exp(cum[C-1]-cum[s]) (<=1)
+    """
+    b, s, h, hd = r.shape
+    c = min(chunk, s)
+    if s % c:
+        raise ValueError(f"seq {s} not divisible by chunk {c}")
+    n = s // c
+
+    def resh(t):
+        return t.reshape(b, n, c, h, hd).astype(jnp.float32)
+
+    r_, k_, v_, lw = map(resh, (r, k, v, logw))
+
+    def per_chunk(s0, inp):
+        rc, kc, vc, lwc = inp                            # (B,C,H,hd)
+        cum = jnp.cumsum(lwc, axis=1)                    # (B,C,H,hd)
+        cum_prev = cum - lwc                             # cum[t-1]
+        # state passthrough: o_state[t] = (r_t * exp(cum[t-1])) . S0
+        r_dec = rc * jnp.exp(cum_prev)
+        o_state = jnp.einsum("bchk,bhkv->bchv", r_dec, s0)
+        # intra-chunk: A[t,s,d] = exp(cum[t-1,d]-cum[s,d]) for s < t
+        diff = cum_prev[:, :, None] - cum[:, None, :, :, :]   # (B,C,C,H,hd)
+        tri = jnp.tril(jnp.ones((c, c), bool), k=-1)[None, :, :, None, None]
+        a = jnp.where(tri, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+        w_ts = jnp.einsum("bthk,btshk,bshk->btsh", rc, a, kc)  # (B,C,C,H)
+        o_intra = jnp.einsum("btsh,bshv->bthv", w_ts, vc)
+        # bonus on the current token
+        o_bonus = (jnp.einsum("bchk,bchk->bch", rc * u[None, None], kc)
+                   [..., None] * vc)
+        # next chunk state: S' = exp(cum[C-1]) S0 + sum_s exp(cum[C-1]-cum[s]) k_s v_s^T
+        dec_total = jnp.exp(cum[:, -1])                   # (B,H,hd)
+        k_dec = kc * jnp.exp(jnp.minimum(cum[:, -1][:, None] - cum, 0.0))
+        s_new = (dec_total[..., None] * s0
+                 + jnp.einsum("bshk,bshv->bhkv", k_dec, vc))
+        return s_new, o_state + o_intra + o_bonus
+
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (r_, k_, v_, lw))
+    state, outs = jax.lax.scan(per_chunk, state.astype(jnp.float32), inputs)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, hd)
+    return out.astype(r.dtype), state
+
+
+def init_rwkv_state(cfg: RWKVConfig, batch: int, dtype=jnp.float32) -> PyTree:
+    h, hd = cfg.n_heads, cfg.head_dim
+    return {
+        "wkv": jnp.zeros((batch, h, hd, hd), dtype),
+        "shift_att": jnp.zeros((batch, cfg.d_model), dtype),
+        "shift_ffn": jnp.zeros((batch, cfg.d_model), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Full block (train / decode)
+# ---------------------------------------------------------------------------
+
+def _time_mix_out(tp, cfg: RWKVConfig, o, g, b, s):
+    o = o.reshape(b, s, cfg.d_model)
+    # per-head group norm (rms variant) then gate
+    oh = o.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    ohf = oh.astype(jnp.float32)
+    var = jnp.mean(jnp.square(ohf), axis=-1, keepdims=True)
+    oh = (ohf * jax.lax.rsqrt(var + 1e-6)).astype(o.dtype)
+    o = oh.reshape(b, s, cfg.d_model) * tp["ln_x"]
+    return (o * g) @ tp["wo"]
+
+
+def rwkv_block_apply(params: PyTree, cfg: RWKVConfig, x: jax.Array,
+                     state: PyTree | None = None
+                     ) -> tuple[jax.Array, PyTree]:
+    """Training/prefill: ``x (B, S, d)`` -> (y, final recurrent state)."""
+    b, s, d = x.shape
+    if state is None:
+        state = init_rwkv_state(cfg, b)
+    tp, cp = params["time"], params["channel"]
+
+    # --- time mix ---
+    xn = L.rms_norm(x, params["ln1"])
+    mixed = _ddlerp(tp, xn, _shift(xn, state["shift_att"]))
+    r, k, v, logw, g = _rkvwg(tp, mixed, cfg.n_heads, cfg.head_dim)
+    if cfg.impl == "chunked" and s > 1:
+        o, wkv = time_mix_chunked(r, k, v, logw, tp["u"].astype(jnp.float32),
+                                  state["wkv"], cfg.chunk)
+    else:
+        o, wkv = time_mix_ref(r, k, v, logw, tp["u"].astype(jnp.float32),
+                              state["wkv"])
+    o = o.astype(x.dtype)
+    x = x + _time_mix_out(tp, cfg, o, g, b, s).astype(x.dtype)
+
+    # --- channel mix ---
+    xn2 = L.rms_norm(x, params["ln2"])
+    shifted = _shift(xn2, state["shift_ffn"])
+    xk = xn2 + (shifted - xn2) * cp["mu_k"]
+    xr = xn2 + (shifted - xn2) * cp["mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ cp["wk"]))
+    out = (kk @ cp["wv"]) * jax.nn.sigmoid(xr @ cp["wr"])
+    x = x + out.astype(x.dtype)
+
+    new_state = {"wkv": wkv, "shift_att": xn[:, -1, :],
+                 "shift_ffn": xn2[:, -1, :]}
+    return x, new_state
+
+
+def rwkv_block_step(params: PyTree, cfg: RWKVConfig, x: jax.Array,
+                    state: PyTree) -> tuple[jax.Array, PyTree]:
+    """Decode: ``x (B, 1, d)`` with O(1) state."""
+    cfg1 = dataclasses.replace(cfg, impl="scan")
+    return rwkv_block_apply(params, cfg1, x, state)

@@ -1,0 +1,360 @@
+"""Unified decoder-only transformer stack covering the assigned families:
+dense (GQA), MoE, SSM (RWKV6), hybrid (RG-LRU + local attention), and
+early-fusion VLM.  Layers are grouped by the config's ``block_pattern`` and
+scanned (compile-time O(1) in depth); heterogeneous patterns scan one
+pattern-repetition per step; remainder layers are unrolled.
+
+API (all pure functions over an ``ArchConfig``):
+  init(cfg, rng)                        -> params
+  forward(cfg, params, batch)           -> (logits, aux_loss)
+  loss_fn(cfg, params, batch)           -> scalar
+  init_decode_state(cfg, batch, max_len)-> state
+  decode_step(cfg, params, tokens, state)-> (logits, new_state)
+
+``batch`` for training: {"tokens" (B,S), "labels" (B,S)}; VLM fusion adds
+{"patch_embeds" (B,P,d), "patch_mask" (B,S) bool} — embeddings at masked
+positions are replaced by projected patch embeddings (early fusion).
+``shard_fn(x, name)`` optionally applies sharding constraints on
+activations (injected by the launcher; identity by default).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as G
+from repro.models import rwkv6 as R
+
+PyTree = Any
+ShardFn = Callable[[jax.Array, str], jax.Array]
+
+__all__ = ["init", "forward", "loss_fn", "init_decode_state", "decode_step",
+           "attn_config", "rwkv_config", "rglru_config"]
+
+
+def _dt(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def _id_shard(x, name):
+    del name
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Per-kind block configs
+# ---------------------------------------------------------------------------
+
+def attn_config(cfg: ArchConfig, hybrid_local: bool = False) -> A.AttnConfig:
+    window = cfg.local_window if hybrid_local else cfg.attn_window
+    return A.AttnConfig(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                        qk_norm=cfg.qk_norm, window=window,
+                        rope_theta=cfg.rope_theta, impl=cfg.attn_impl)
+
+
+def rwkv_config(cfg: ArchConfig) -> R.RWKVConfig:
+    return R.RWKVConfig(d_model=cfg.d_model, d_ff=cfg.d_ff,
+                        head_dim=cfg.rwkv_head_dim, chunk=cfg.rwkv_chunk)
+
+
+def rglru_config(cfg: ArchConfig) -> G.RGLRUConfig:
+    return G.RGLRUConfig(d_model=cfg.d_model, d_rnn=cfg.d_rnn)
+
+
+def moe_config(cfg: ArchConfig) -> M.MoEConfig:
+    return M.MoEConfig(d_model=cfg.d_model, d_ff=cfg.d_ff,
+                       n_experts=cfg.n_experts, top_k=cfg.moe_top_k,
+                       capacity_factor=cfg.capacity_factor,
+                       mlp_variant=cfg.mlp_variant)
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply / decode-step (dispatch on kind)
+# ---------------------------------------------------------------------------
+
+def _block_init(cfg: ArchConfig, kind: str, rng, dtype) -> PyTree:
+    if kind == "attn":
+        hybrid_local = len(cfg.block_pattern) > 1
+        ks = jax.random.split(rng, 3)
+        p = {"ln1": L.rms_norm_init(cfg.d_model, dtype),
+             "attn": A.attn_init(ks[0], attn_config(cfg, hybrid_local), dtype),
+             "ln2": L.rms_norm_init(cfg.d_model, dtype)}
+        if cfg.n_experts:
+            p["ffn"] = M.moe_init(ks[1], moe_config(cfg), dtype)
+        else:
+            p["ffn"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                  cfg.mlp_variant, dtype)
+        return p
+    if kind == "rec":
+        ks = jax.random.split(rng, 2)
+        return {"ln1": L.rms_norm_init(cfg.d_model, dtype),
+                "rec": G.rglru_block_init(ks[0], rglru_config(cfg), dtype),
+                "ln2": L.rms_norm_init(cfg.d_model, dtype),
+                "ffn": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                  cfg.mlp_variant, dtype)}
+    if kind == "rwkv":
+        return R.rwkv_block_init(rng, rwkv_config(cfg), dtype)
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def _block_apply(cfg: ArchConfig, kind: str, params: PyTree, h: jax.Array,
+                 aux: jax.Array, positions: jax.Array,
+                 shard: ShardFn) -> tuple[jax.Array, jax.Array]:
+    """Training/prefill block (fresh recurrent state)."""
+    if kind == "attn":
+        hybrid_local = len(cfg.block_pattern) > 1
+        acfg = attn_config(cfg, hybrid_local)
+        a = A.attention(params["attn"], acfg,
+                        shard(L.rms_norm(h, params["ln1"]), "interior"),
+                        positions)
+        h = h + shard(a, "residual")
+        hn = shard(L.rms_norm(h, params["ln2"]), "interior")
+        if cfg.n_experts:
+            f, aux_l = M.moe_apply(params["ffn"], moe_config(cfg), hn)
+            aux = aux + aux_l
+        else:
+            f = L.mlp_apply(params["ffn"], hn, cfg.mlp_variant)
+        return h + shard(f, "residual"), aux
+    if kind == "rec":
+        r, _ = G.rglru_block_apply(params["rec"], rglru_config(cfg),
+                                   shard(L.rms_norm(h, params["ln1"]),
+                                         "interior"))
+        h = h + shard(r, "residual")
+        f = L.mlp_apply(params["ffn"],
+                        shard(L.rms_norm(h, params["ln2"]), "interior"),
+                        cfg.mlp_variant)
+        return h + shard(f, "residual"), aux
+    if kind == "rwkv":
+        y, _ = R.rwkv_block_apply(params, rwkv_config(cfg), h)
+        return shard(y, "residual"), aux
+    raise ValueError(kind)
+
+
+def _block_state_init(cfg: ArchConfig, kind: str, batch: int, max_len: int,
+                      dtype) -> PyTree:
+    if kind == "attn":
+        hybrid_local = len(cfg.block_pattern) > 1
+        return A.init_cache(attn_config(cfg, hybrid_local), batch, max_len,
+                            dtype)
+    if kind == "rec":
+        return G.init_rglru_state(rglru_config(cfg), batch, dtype)
+    if kind == "rwkv":
+        st = R.init_rwkv_state(rwkv_config(cfg), batch)
+        # token-shift carries live in activation dtype; wkv state stays fp32
+        st["shift_att"] = st["shift_att"].astype(dtype)
+        st["shift_ffn"] = st["shift_ffn"].astype(dtype)
+        return st
+    raise ValueError(kind)
+
+
+def _block_step(cfg: ArchConfig, kind: str, params: PyTree, h: jax.Array,
+                state: PyTree, length: jax.Array,
+                shard: ShardFn = _id_shard) -> tuple[jax.Array, PyTree]:
+    """Single-token decode block."""
+    if kind == "attn":
+        hybrid_local = len(cfg.block_pattern) > 1
+        acfg = attn_config(cfg, hybrid_local)
+        a, new_cache = A.decode_step(params["attn"], acfg,
+                                     L.rms_norm(h, params["ln1"]),
+                                     state, length, shard)
+        h = h + a
+        hn = L.rms_norm(h, params["ln2"])
+        if cfg.n_experts:
+            f, _ = M.moe_apply(params["ffn"], moe_config(cfg), hn)
+        else:
+            f = L.mlp_apply(params["ffn"], hn, cfg.mlp_variant)
+        return h + f, new_cache
+    if kind == "rec":
+        r, new_state = G.rglru_block_step(params["rec"], rglru_config(cfg),
+                                          L.rms_norm(h, params["ln1"]), state)
+        h = h + r
+        f = L.mlp_apply(params["ffn"], L.rms_norm(h, params["ln2"]),
+                        cfg.mlp_variant)
+        return h + f, new_state
+    if kind == "rwkv":
+        return R.rwkv_block_step(params, rwkv_config(cfg), h, state)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Full-model init
+# ---------------------------------------------------------------------------
+
+def _stack_trees(trees: list[PyTree]) -> PyTree:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init(cfg: ArchConfig, rng: jax.Array) -> PyTree:
+    dtype = _dt(cfg.param_dtype)
+    pat = cfg.block_pattern
+    n_groups, rest = cfg.n_groups, cfg.rest_kinds
+    keys = jax.random.split(rng, 4 + cfg.n_layers)
+    p: dict = {
+        "embed": L.embed_init(keys[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": L.rms_norm_init(cfg.d_model, dtype),
+        "head": L.dense_init(keys[1], cfg.d_model, cfg.vocab, dtype),
+    }
+    if cfg.fuse_patches:
+        p["patch_proj"] = L.dense_init(keys[2], cfg.d_model, cfg.d_model,
+                                       dtype)
+    lk = iter(keys[4:])
+    if cfg.scan_layers and n_groups > 0:
+        groups = []
+        for _ in range(n_groups):
+            groups.append({str(j): _block_init(cfg, kind, next(lk), dtype)
+                           for j, kind in enumerate(pat)})
+        p["groups"] = _stack_trees(groups)
+    else:
+        p["groups_unrolled"] = [
+            {str(j): _block_init(cfg, kind, next(lk), dtype)
+             for j, kind in enumerate(pat)}
+            for _ in range(n_groups)]
+    p["rest"] = {str(j): _block_init(cfg, kind, next(lk), dtype)
+                 for j, kind in enumerate(rest)}
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed(cfg: ArchConfig, params: PyTree, batch: dict, shard: ShardFn
+           ) -> jax.Array:
+    h = jnp.take(params["embed"], batch["tokens"], axis=0)
+    h = h.astype(_dt(cfg.act_dtype))
+    if cfg.fuse_patches and "patch_embeds" in batch:
+        # Early fusion: positions flagged by patch_mask get (projected)
+        # patch embeddings scattered over the token stream, in order.
+        pe = batch["patch_embeds"].astype(h.dtype) @ params["patch_proj"]
+        mask = batch["patch_mask"]                       # (B, S) bool
+        idx = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1
+        idx = jnp.clip(idx, 0, pe.shape[1] - 1)
+        gathered = jnp.take_along_axis(pe, idx[..., None], axis=1)
+        h = jnp.where(mask[..., None], gathered, h)
+    return shard(h, "activation")
+
+
+def forward(cfg: ArchConfig, params: PyTree, batch: dict,
+            shard: ShardFn = _id_shard, last_only: bool = False
+            ) -> tuple[jax.Array, jax.Array]:
+    """``last_only=True`` computes logits for the FINAL position only —
+    the serving-prefill path (full-seq logits at 32k x 256k vocab is a
+    0.5 TB tensor; EXPERIMENTS.md §Perf it-3)."""
+    h = _embed(cfg, params, batch, shard)
+    b, s = batch["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    aux = jnp.zeros((), jnp.float32)
+    pat = cfg.block_pattern
+
+    def group_body(carry, gp):
+        h, aux = carry
+        for j, kind in enumerate(pat):
+            h, aux = _block_apply(cfg, kind, gp[str(j)], h, aux, positions,
+                                  shard)
+        return (h, aux), None
+
+    if cfg.scan_layers and cfg.n_groups > 0:
+        body = jax.checkpoint(group_body) if cfg.remat else group_body
+        (h, aux), _ = jax.lax.scan(body, (h, aux), params["groups"])
+    elif "groups_unrolled" in params:
+        body = jax.checkpoint(group_body) if cfg.remat else group_body
+        for gp in params["groups_unrolled"]:
+            (h, aux), _ = body((h, aux), gp)
+    for j, kind in enumerate(cfg.rest_kinds):
+        h, aux = _block_apply(cfg, kind, params["rest"][str(j)], h, aux,
+                              positions, shard)
+    if last_only:
+        h = h[:, -1:, :]
+    h = L.rms_norm(h, params["final_norm"])
+    logits = shard(h @ params["head"], "logits")
+    return logits, aux
+
+
+def loss_fn(cfg: ArchConfig, params: PyTree, batch: dict,
+            shard: ShardFn = _id_shard, aux_weight: float = 0.01
+            ) -> jax.Array:
+    logits, aux = forward(cfg, params, batch, shard)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        nll = nll[..., 0] * mask
+        loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        loss = jnp.mean(nll)
+    return loss + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int) -> PyTree:
+    dtype = _dt(cfg.act_dtype)
+    pat = cfg.block_pattern
+    state: dict = {"length": jnp.zeros((), jnp.int32)}
+    if cfg.scan_layers and cfg.n_groups > 0:
+        groups = [
+            {str(j): _block_state_init(cfg, kind, batch, max_len, dtype)
+             for j, kind in enumerate(pat)}
+            for _ in range(cfg.n_groups)]
+        state["groups"] = _stack_trees(groups)
+    elif cfg.n_groups > 0:
+        state["groups_unrolled"] = [
+            {str(j): _block_state_init(cfg, kind, batch, max_len, dtype)
+             for j, kind in enumerate(pat)}
+            for _ in range(cfg.n_groups)]
+    state["rest"] = {str(j): _block_state_init(cfg, kind, batch, max_len,
+                                               dtype)
+                     for j, kind in enumerate(cfg.rest_kinds)}
+    return state
+
+
+def decode_step(cfg: ArchConfig, params: PyTree, tokens: jax.Array,
+                state: PyTree, shard: ShardFn = _id_shard
+                ) -> tuple[jax.Array, PyTree]:
+    """One decode step: ``tokens (B, 1)`` -> (logits (B, 1, V), new state)."""
+    h = jnp.take(params["embed"], tokens, axis=0).astype(_dt(cfg.act_dtype))
+    h = shard(h, "activation")
+    length = state["length"]
+    pat = cfg.block_pattern
+    new_state: dict = {"length": length + 1}
+
+    def group_body(h, inp):
+        gp, gs = inp
+        new_gs = {}
+        for j, kind in enumerate(pat):
+            h, s_new = _block_step(cfg, kind, gp[str(j)], h, gs[str(j)],
+                                   length, shard)
+            new_gs[str(j)] = s_new
+        return h, new_gs
+
+    if cfg.scan_layers and cfg.n_groups > 0:
+        h, gs = jax.lax.scan(group_body, h,
+                             (params["groups"], state["groups"]))
+        new_state["groups"] = gs
+    elif "groups_unrolled" in state:
+        new_unrolled = []
+        for gp, gs in zip(params["groups_unrolled"],
+                          state["groups_unrolled"]):
+            h, gs_new = group_body(h, (gp, gs))
+            new_unrolled.append(gs_new)
+        new_state["groups_unrolled"] = new_unrolled
+    new_rest = {}
+    for j, kind in enumerate(cfg.rest_kinds):
+        h, s_new = _block_step(cfg, kind, params["rest"][str(j)], h,
+                               state["rest"][str(j)], length, shard)
+        new_rest[str(j)] = s_new
+    new_state["rest"] = new_rest
+    h = L.rms_norm(h, params["final_norm"])
+    logits = shard(h @ params["head"], "logits")
+    return logits, new_state

@@ -1,0 +1,6 @@
+"""Self-contained optimizers (no optax dependency)."""
+from repro.optim.optimizers import (sgd, momentum, adamw, OptState,
+                                    Optimizer, apply_updates,
+                                    cosine_schedule, constant_schedule,
+                                    warmup_cosine_schedule, global_norm,
+                                    clip_by_global_norm)

@@ -1,0 +1,148 @@
+"""Minimal, pytree-native optimizer library.
+
+An ``Optimizer`` is a pair of pure functions (init, update) over parameter
+pytrees, mirroring the optax interface shape so call-sites stay idiomatic,
+but fully self-contained.  All state lives in pytrees so optimizers compose
+with pjit sharding (state inherits param sharding) and with scan-stacked
+layer parameters unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    inner: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], OptState]
+    update: Callable[[PyTree, OptState, PyTree], tuple[PyTree, OptState]]
+    """update(grads, state, params) -> (updates, new_state); updates are
+    ADDED to params by ``apply_updates`` (they already contain the -lr)."""
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: g * scale, tree)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.1
+                    ) -> Schedule:
+    def f(step):
+        t = jnp.minimum(step.astype(jnp.float32), total_steps) / total_steps
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return f
+
+
+def warmup_cosine_schedule(lr: float, warmup: int, total_steps: int,
+                           final_frac: float = 0.1) -> Schedule:
+    cos = cosine_schedule(lr, max(1, total_steps - warmup), final_frac)
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / max(1, warmup)
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+    return f
+
+
+def _as_schedule(lr: float | Schedule) -> Schedule:
+    return lr if callable(lr) else constant_schedule(lr)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+def sgd(lr: float | Schedule) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32), inner=())
+
+    def update(grads, state, params):
+        del params
+        lr_t = sched(state.step)
+        updates = jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32), grads)
+        return updates, OptState(step=state.step + 1, inner=())
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float | Schedule, beta: float = 0.9) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        vel = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return OptState(step=jnp.zeros((), jnp.int32), inner=vel)
+
+    def update(grads, state, params):
+        del params
+        lr_t = sched(state.step)
+        vel = jax.tree.map(lambda v, g: beta * v + g.astype(jnp.float32),
+                           state.inner, grads)
+        updates = jax.tree.map(lambda v: -lr_t * v, vel)
+        return updates, OptState(step=state.step + 1, inner=vel)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float | Schedule, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        inner = {"m": jax.tree.map(zeros, params),
+                 "v": jax.tree.map(zeros, params)}
+        return OptState(step=jnp.zeros((), jnp.int32), inner=inner)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = sched(state.step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state.inner["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)),
+                         state.inner["v"], grads)
+
+        def upd(m_, v_, p):
+            mhat = m_ / bc1
+            vhat = v_ / bc2
+            return -lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                            + weight_decay * p.astype(jnp.float32))
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, OptState(step=step, inner={"m": m, "v": v})
+
+    return Optimizer(init, update)

@@ -1,0 +1,123 @@
+"""Tests for HAC + baselines + metrics (paper §II-C)."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import clustering as clu
+
+
+def _block_similarity(sizes, in_sim=0.95, cross_sim=0.2, noise=0.02,
+                      seed=0):
+    rng = np.random.default_rng(seed)
+    n = sum(sizes)
+    labels = np.repeat(np.arange(len(sizes)), sizes)
+    r = np.where(labels[:, None] == labels[None, :], in_sim, cross_sim)
+    r = r + rng.uniform(-noise, noise, size=(n, n))
+    r = (r + r.T) / 2
+    np.fill_diagonal(r, 1.0)
+    return r, labels
+
+
+class TestHAC:
+    @pytest.mark.parametrize("linkage", ["average", "single", "complete"])
+    def test_recovers_blocks(self, linkage):
+        r, true = _block_similarity([5, 5, 4])
+        labels = clu.hac_clusters(r, 3, linkage)
+        assert clu.clustering_accuracy(labels, true) == 1.0
+
+    def test_paper_table1_example(self):
+        """The exact matrix from paper Table I."""
+        r = np.array([
+            [1.00, 0.97, 0.31, 0.31, 0.32],
+            [0.97, 1.00, 0.31, 0.32, 0.32],
+            [0.31, 0.31, 1.00, 0.97, 0.98],
+            [0.31, 0.32, 0.97, 1.00, 0.98],
+            [0.32, 0.32, 0.98, 0.98, 1.00]])
+        labels = clu.hac_clusters(r, 2)
+        assert clu.clustering_accuracy(labels, [0, 0, 1, 1, 1]) == 1.0
+
+    def test_dendrogram_merge_count(self):
+        r, _ = _block_similarity([3, 3])
+        d = clu.hac(r)
+        assert len(d.merges) == 5
+        assert d.n_leaves == 6
+
+    def test_cut_extremes(self):
+        r, _ = _block_similarity([4, 4])
+        d = clu.hac(r)
+        assert len(np.unique(clu.cut(d, 1))) == 1
+        assert len(np.unique(clu.cut(d, 8))) == 8
+
+    def test_average_linkage_heights_monotone_on_blocks(self):
+        r, _ = _block_similarity([4, 4], noise=0.0)
+        d = clu.hac(r, "average")
+        h = d.heights()
+        # within-block merges (high sim) happen before the final
+        # cross-block merge (low sim)
+        assert h[-1] < h[0]
+
+    @given(n=st.integers(4, 12), t=st.integers(2, 4))
+    @settings(max_examples=15, deadline=None)
+    def test_cut_partitions_property(self, n, t):
+        """cut() always yields exactly t non-empty clusters covering 0..N-1."""
+        if t > n:
+            return
+        rng = np.random.default_rng(n * 100 + t)
+        r = rng.uniform(0, 1, (n, n))
+        r = (r + r.T) / 2
+        np.fill_diagonal(r, 1.0)
+        labels = clu.hac_clusters(r, t)
+        assert labels.shape == (n,)
+        assert len(np.unique(labels)) == t
+
+    def test_relabel_invariance(self):
+        r, true = _block_similarity([4, 3, 3], seed=3)
+        perm = np.random.default_rng(1).permutation(10)
+        labels_a = clu.hac_clusters(r, 3)
+        labels_b = clu.hac_clusters(r[np.ix_(perm, perm)], 3)
+        assert clu.adjusted_rand_index(labels_a[perm], labels_b) == \
+            pytest.approx(1.0)
+
+
+class TestBaselines:
+    def test_random_clusters_nonempty(self):
+        labels = clu.random_clusters(10, 3, rng=0)
+        assert len(np.unique(labels)) == 3
+
+    def test_random_clusters_fixed_sizes(self):
+        labels = clu.random_clusters(10, 3, rng=0, cluster_sizes=[5, 3, 2])
+        sizes = sorted(np.bincount(labels))
+        assert sizes == [2, 3, 5]
+
+    def test_oracle(self):
+        assert (clu.oracle_clusters([7, 7, 2, 2]) ==
+                np.array([1, 1, 0, 0])).all()
+
+    def test_spectral_recovers_blocks(self):
+        r, true = _block_similarity([6, 6], seed=5)
+        labels = clu.spectral_clusters(r, 2, rng=0)
+        assert clu.clustering_accuracy(labels, true) == 1.0
+
+    def test_ifca_assign(self):
+        losses = np.array([[0.1, 2.0], [3.0, 0.5], [0.2, 9.0]])
+        assert (clu.ifca_assign(losses) == np.array([0, 1, 0])).all()
+
+
+class TestMetrics:
+    def test_accuracy_perfect_any_permutation(self):
+        pred = np.array([2, 2, 0, 0, 1])
+        true = [5, 5, 9, 9, 4]
+        assert clu.clustering_accuracy(pred, true) == 1.0
+
+    def test_accuracy_partial(self):
+        pred = np.array([0, 0, 0, 1])
+        true = [0, 0, 1, 1]
+        assert clu.clustering_accuracy(pred, true) == 0.75
+
+    def test_ari_bounds(self):
+        assert clu.adjusted_rand_index([0, 0, 1, 1], [1, 1, 0, 0]) == \
+            pytest.approx(1.0)
+        low = clu.adjusted_rand_index([0, 1, 0, 1], [0, 0, 1, 1])
+        assert low < 0.1

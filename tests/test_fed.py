@@ -1,0 +1,194 @@
+"""Federated substrate tests: partition, FedAvg, hierarchy, trainer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import clustering as clu
+from repro.core import oneshot
+from repro.core.similarity import SimilarityConfig
+from repro.data import partition as dpart
+from repro.data import synthetic as syn
+from repro.fed import client as fclient
+from repro.fed.fedavg import fedavg as _fedavg, weighted_mean as _wmean
+from repro.fed import hierarchy as hier
+from repro.fed import partition as fpart
+from repro.fed import trainer as ftrainer
+from repro.models import mlp
+
+
+class TestPartition:
+    def setup_method(self):
+        self.params = {
+            "conv1": {"w": jnp.ones((2, 2)), "b": jnp.zeros(2)},
+            "fc": {"w": jnp.ones((4, 3))},
+            "head": {"w": jnp.ones((3, 10)), "b": jnp.zeros(10)},
+        }
+
+    def test_split_merge_roundtrip(self):
+        pred = fpart.prefix_predicate(["conv1"])
+        common, spec = fpart.split_params(self.params, pred)
+        assert set(common) == {"conv1"}
+        assert set(spec) == {"fc", "head"}
+        merged = fpart.merge_params(common, spec)
+        assert jax.tree.structure(merged) == jax.tree.structure(self.params)
+
+    def test_every_leaf_on_exactly_one_side(self):
+        pred = fpart.prefix_predicate(["conv1", "head/w"])
+        common, spec = fpart.split_params(self.params, pred)
+        n = len(jax.tree.leaves(common)) + len(jax.tree.leaves(spec))
+        assert n == len(jax.tree.leaves(self.params))
+
+    def test_merge_rejects_overlap(self):
+        with pytest.raises(ValueError):
+            fpart.merge_params({"a": jnp.ones(2)}, {"a": jnp.ones(2)})
+
+    def test_tree_paths(self):
+        paths = fpart.tree_paths(self.params)
+        assert ("conv1", "w") in paths and ("head", "b") in paths
+
+
+class TestFedAvg:
+    def test_weighted_mean_exact(self):
+        trees = [{"w": jnp.asarray([2.0])}, {"w": jnp.asarray([6.0])}]
+        out = _wmean(trees, [3.0, 1.0])
+        assert float(out["w"][0]) == pytest.approx(3.0)
+
+    @given(w1=st.integers(1, 100), w2=st.integers(1, 100))
+    @settings(max_examples=20, deadline=None)
+    def test_convex_combination_property(self, w1, w2):
+        a, b = 1.0, 5.0
+        out = _fedavg([{"x": jnp.asarray([a])},
+                               {"x": jnp.asarray([b])}], [w1, w2])
+        v = float(out["x"][0])
+        assert min(a, b) - 1e-5 <= v <= max(a, b) + 1e-5
+
+    def test_identity_when_single_client(self):
+        tree = {"w": jnp.arange(4.0)}
+        out = _fedavg([tree], [17])
+        np.testing.assert_allclose(np.asarray(out["w"]),
+                                   np.asarray(tree["w"]))
+
+
+class TestHierarchy:
+    def test_gps_aggregate_only_touches_common(self):
+        p1 = {"common": {"w": jnp.asarray([0.0])},
+              "task": {"w": jnp.asarray([1.0])}}
+        p2 = {"common": {"w": jnp.asarray([2.0])},
+              "task": {"w": jnp.asarray([5.0])}}
+        pred = fpart.prefix_predicate(["common"])
+        out = hier.gps_aggregate([p1, p2], [1.0, 1.0], pred)
+        assert float(out[0]["common"]["w"][0]) == pytest.approx(1.0)
+        assert float(out[1]["common"]["w"][0]) == pytest.approx(1.0)
+        assert float(out[0]["task"]["w"][0]) == pytest.approx(1.0)
+        assert float(out[1]["task"]["w"][0]) == pytest.approx(5.0)
+
+    def test_masked_cluster_mean_matches_loop(self):
+        rng = np.random.default_rng(0)
+        u, t = 6, 2
+        vals = {"w": jnp.asarray(rng.standard_normal((u, 3, 4)),
+                                 jnp.float32)}
+        labels = np.asarray([0, 0, 1, 1, 1, 0])
+        weights = jnp.asarray(rng.uniform(1, 10, u), jnp.float32)
+        onehot = jnp.asarray(np.eye(t)[labels], jnp.float32)
+        out = hier.masked_cluster_mean(vals, onehot, weights)
+        for c in range(t):
+            idx = labels == c
+            w = np.asarray(weights)[idx]
+            expected = (np.asarray(vals["w"])[idx]
+                        * w[:, None, None]).sum(0) / w.sum()
+            np.testing.assert_allclose(np.asarray(out["w"][c]), expected,
+                                       rtol=1e-5, atol=1e-5)
+
+
+class TestClientUpdate:
+    def test_local_update_descends(self):
+        cfg = mlp.PaperMLPConfig(m=8, hidden=4, n_classes=2)
+        params = mlp.init(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal((64, 8)).astype(np.float32)
+        y = (x[:, 0] > 0).astype(np.int32)
+        batches = fclient.make_batches(x, y, 16, 20, rng)
+        new_p, losses = fclient.local_update(
+            params, batches, mlp.loss_fn(cfg),
+            fclient.ClientConfig(lr=0.1))
+        assert float(losses[-1]) < float(losses[0])
+
+
+class TestMTHFLTrainer:
+    def _setup(self, labels):
+        users = dpart.paper_fmnist_three_task(seed=0, scale=0.15)
+        tasks = dpart.FMNIST_TASKS
+        cc = []
+        for t in range(3):
+            members = [u for u, l in zip(users, labels) if l == t]
+            counts = {}
+            for u in members:
+                counts[tuple(u.task_classes)] = counts.get(
+                    tuple(u.task_classes), 0) + 1
+            cc.append(list(max(counts, key=counts.get)) if counts
+                      else list(tasks[t]))
+
+        def build(classes):
+            cfg = mlp.PaperMLPConfig(m=784, n_classes=len(classes))
+            return ftrainer.TaskModel(
+                init=lambda k, c=cfg: mlp.init(c, k),
+                loss_fn=mlp.loss_fn(cfg),
+                accuracy=lambda p, x, y, c=cfg: mlp.accuracy(c, p, x, y),
+                is_common=fpart.prefix_predicate(mlp.COMMON_PREFIXES))
+
+        models = [build(c) for c in cc]
+        evals = []
+        for c in cc:
+            task_id = [k for k, v in tasks.items()
+                       if set(v) == set(c)][0]
+            x, y = syn.make_task_dataset(
+                syn.FMNIST_LIKE, list(c), 40, seed=99,
+                task_of_class={cl: task_id for cl in c})
+            lut = {cl: i for i, cl in enumerate(c)}
+            evals.append((jnp.asarray(x), np.asarray(
+                [lut[int(v)] for v in y], np.int32)))
+        return users, models, evals, cc
+
+    def test_oracle_clustering_learns_all_tasks(self):
+        users = dpart.paper_fmnist_three_task(seed=0, scale=0.15)
+        labels = clu.oracle_clusters([u.task_id for u in users])
+        users, models, evals, cc = self._setup(labels)
+        cfg = ftrainer.MTHFLConfig(global_rounds=6, local_rounds=1,
+                                   local_steps=12, batch_size=32,
+                                   client=fclient.ClientConfig(
+                                       lr=0.05, optimizer="momentum"))
+        hist = ftrainer.train_mthfl(users, labels, models, evals, cfg,
+                                    cluster_classes=cc)
+        assert hist.accuracy.shape == (6, 3)
+        assert hist.accuracy[-1].min() > 0.6
+        assert hist.accuracy[-1].mean() > 0.75
+
+    def test_history_finite(self):
+        users = dpart.paper_fmnist_three_task(seed=0, scale=0.15)
+        labels = clu.random_clusters(len(users), 3, rng=0)
+        users, models, evals, cc = self._setup(labels)
+        cfg = ftrainer.MTHFLConfig(global_rounds=2, local_rounds=1,
+                                   local_steps=5, batch_size=16)
+        hist = ftrainer.train_mthfl(users, labels, models, evals, cfg,
+                                    cluster_classes=cc)
+        assert np.isfinite(hist.accuracy).all()
+        assert np.isfinite(hist.train_loss).all()
+
+
+class TestDistributedProtocol:
+    def test_shard_map_matches_single_host(self):
+        """The shard_map collective protocol == the single-host reference
+        (runs on a 1-device mesh on CPU; the dry-run exercises 512)."""
+        from repro.core import distributed as dist
+        from repro.core import similarity as sim
+
+        rng = np.random.default_rng(0)
+        feats = jnp.asarray(rng.standard_normal((4, 64, 16)), jnp.float32)
+        cfg = SimilarityConfig(top_k=8)
+        mesh = dist.make_user_mesh("data")
+        r_dist = dist.distributed_similarity(feats, mesh, cfg, axis="data")
+        r_ref = sim.similarity_matrix(feats, cfg)
+        np.testing.assert_allclose(np.asarray(r_dist), np.asarray(r_ref),
+                                   rtol=1e-4, atol=1e-4)

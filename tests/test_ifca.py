@@ -1,0 +1,37 @@
+"""IFCA iterative baseline: converges to the task partition on separable
+data, at a per-round comm cost the one-shot algorithm pays once."""
+import jax
+import numpy as np
+
+from repro.core import clustering as clu
+from repro.core.oneshot import CommLedger
+from repro.data import partition as dpart
+from repro.fed import client as fclient
+from repro.fed.ifca import IFCAConfig, run_ifca
+from repro.models import mlp
+
+
+def test_ifca_converges_and_costs_more():
+    users = dpart.paper_fmnist_three_task(seed=0, scale=0.15)
+    mcfg = mlp.PaperMLPConfig(m=784, n_classes=10)
+
+    def label_fn(u):
+        return u.y.astype(np.int32)
+
+    cfg = IFCAConfig(n_clusters=3, rounds=4, local_steps=10,
+                     client=fclient.ClientConfig(lr=0.05,
+                                                 optimizer="momentum"))
+    res = run_ifca(users, lambda k: mlp.init(mcfg, k),
+                   mlp.loss_fn(mcfg), label_fn, cfg)
+    true = [u.task_id for u in users]
+    final_acc = clu.clustering_accuracy(res.assignments[-1], true)
+    first_acc = clu.clustering_accuracy(res.assignments[0], true)
+    # iterative clustering needs rounds to beat its (random-init) round-0
+    # assignment; it should improve and end reasonably clustered
+    assert final_acc >= first_acc
+    assert final_acc >= 0.6
+
+    # comm: ONE IFCA round costs more than the whole one-shot protocol
+    led = CommLedger(n_users=len(users), d=784, top_k=8)
+    oneshot_total = led.per_user_upload + led.per_user_download
+    assert res.per_user_bytes_per_round > oneshot_total

@@ -1,0 +1,102 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.eigproject import ops as proj_ops
+from repro.kernels.eigproject.ref import project_norms_ref
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention.ref import flash_ref
+from repro.kernels.gram import ops as gram_ops
+from repro.kernels.gram.ref import gram_ref
+
+
+class TestGramKernel:
+    @pytest.mark.parametrize("n,d", [(128, 128), (256, 128), (384, 256),
+                                     (130, 96), (64, 40), (512, 512)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_allclose_sweep(self, n, d, dtype):
+        rng = np.random.default_rng(n * 7 + d)
+        x = jnp.asarray(rng.standard_normal((n, d)), dtype)
+        out = gram_ops.gram_matrix(x, interpret=True)
+        ref = gram_ref(x)
+        tol = 1e-3 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=tol, atol=tol * 10)
+
+    def test_symmetry(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.standard_normal((256, 128)), jnp.float32)
+        out = np.asarray(gram_ops.gram_matrix(x, interpret=True))
+        np.testing.assert_allclose(out, out.T, atol=1e-4)
+
+
+class TestEigprojectKernel:
+    @pytest.mark.parametrize("d,k", [(128, 128), (256, 8), (200, 5),
+                                     (384, 64), (96, 12)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_allclose_sweep(self, d, k, dtype):
+        rng = np.random.default_rng(d * 3 + k)
+        g = rng.standard_normal((d, d)).astype(np.float32)
+        g = jnp.asarray((g + g.T) / 2, dtype)
+        v = jnp.asarray(rng.standard_normal((d, k)), dtype)
+        out = proj_ops.project_norms(g, v, interpret=True)
+        ref = project_norms_ref(g, v)
+        tol = 1e-3 if dtype == jnp.float32 else 6e-2
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=tol, atol=tol * 10)
+
+    def test_zero_vector_column(self):
+        g = jnp.eye(128, dtype=jnp.float32)
+        v = jnp.zeros((128, 8), jnp.float32)
+        out = proj_ops.project_norms(g, v, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize("b,s,h,hd", [(2, 256, 2, 128), (1, 128, 4, 128),
+                                          (1, 512, 1, 128), (2, 256, 2, 256)])
+    @pytest.mark.parametrize("causal,window", [(True, 0), (True, 64),
+                                               (False, 0)])
+    def test_allclose_sweep(self, b, s, h, hd, causal, window):
+        rng = jax.random.PRNGKey(s * 13 + h + window)
+        ks = jax.random.split(rng, 3)
+        q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, h, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, h, hd), jnp.float32)
+        out = fa_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                     interpret=True)
+
+        def flat(t):
+            return t.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+
+        ref = flash_ref(flat(q), flat(k), flat(v), causal=causal,
+                        window=window)
+        ref = ref.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_bf16(self):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        shape = (1, 256, 2, 128)
+        q, k, v = (jax.random.normal(kk, shape, jnp.bfloat16) for kk in ks)
+        out = fa_ops.flash_attention(q, k, v, interpret=True)
+
+        def flat(t):
+            return t.transpose(0, 2, 1, 3).reshape(2, 256, 128)
+
+        ref = flash_ref(flat(q.astype(jnp.float32)),
+                        flat(k.astype(jnp.float32)),
+                        flat(v.astype(jnp.float32)))
+        ref = ref.reshape(1, 2, 256, 128).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref), rtol=0.1, atol=0.05)
+
+    def test_unaligned_falls_back(self):
+        """Non-block-aligned shapes route to the oracle (no crash)."""
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q, k, v = (jax.random.normal(kk, (1, 100, 2, 64)) for kk in ks)
+        out = fa_ops.flash_attention(q, k, v, interpret=True)
+        assert out.shape == (1, 100, 2, 64)

@@ -1,0 +1,58 @@
+"""Manual Megatron TP+SP (shard_map) == auto-sharded reference.
+
+Runs in a SUBPROCESS with 8 placeholder host devices so the main test
+session keeps its single real CPU device (the same isolation rule the
+dry-run follows).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs.base import ArchConfig
+    from repro.launch import manual_tp as MT
+    from repro.models import transformer as T
+
+    cfg = ArchConfig(name="t", arch_type="dense", n_layers=2, d_model=64,
+                     n_heads=8, n_kv_heads=4, head_dim=8, d_ff=128,
+                     vocab=64, qk_norm=True, param_dtype="float32",
+                     act_dtype="float32", remat=True)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    ref = float(T.loss_fn(cfg, params, batch, aux_weight=0.0))
+    g_ref = jax.grad(lambda p: T.loss_fn(cfg, p, batch,
+                                         aux_weight=0.0))(params)
+    loss_fn, pspecs = MT.manual_loss_fn(cfg, mesh)
+    with mesh:
+        pp = jax.device_put(params, jax.tree.map(
+            lambda s: NamedSharding(mesh, s), pspecs,
+            is_leaf=lambda x: isinstance(x, P)))
+        bb = jax.device_put(batch, NamedSharding(mesh, P(("data",), None)))
+        out = float(jax.jit(loss_fn)(pp, bb))
+        g = jax.device_get(jax.jit(jax.grad(loss_fn))(pp, bb))
+    assert abs(out - ref) < 1e-4, (out, ref)
+    diffs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        jnp.asarray(a, jnp.float32) - b))), g, g_ref)
+    worst = max(jax.tree.leaves(diffs))
+    assert worst < 1e-4, worst
+    print("MANUAL_TP_OK", out, worst)
+""")
+
+
+def test_manual_tp_matches_auto_8dev():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "MANUAL_TP_OK" in res.stdout

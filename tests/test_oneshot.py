@@ -1,0 +1,124 @@
+"""Integration tests: one-shot clustering end-to-end on the paper's
+experimental layouts (synthetic stand-ins, DESIGN.md §2)."""
+import numpy as np
+import pytest
+
+from repro.core import clustering as clu
+from repro.core import oneshot
+from repro.core.similarity import SimilarityConfig
+from repro.data import features as feat
+from repro.data import partition as part
+from repro.data import synthetic as syn
+
+
+class TestPaperScenarios:
+    def test_cifar_two_task_perfect_clustering(self):
+        """Fig. 2 setup: 2 tasks x 5 users, 10% minority labels."""
+        users = part.paper_cifar_two_task(n_per_user=300, seed=0)
+        fc = feat.FeatureConfig(kind="random_projection", d=128)
+        feats = [feat.feature_map(u.x, fc) for u in users]
+        res = oneshot.one_shot_clustering(feats, n_clusters=2,
+                                          cfg=SimilarityConfig(top_k=8))
+        acc = clu.clustering_accuracy(res.labels, [u.task_id for u in users])
+        assert acc == 1.0
+
+    def test_cifar_block_structure_matches_table1(self):
+        """In-task similarity ~1, cross-task clearly lower (Table I)."""
+        users = part.paper_cifar_two_task(n_per_user=300, seed=1)
+        fc = feat.FeatureConfig(kind="random_projection", d=128)
+        feats = [feat.feature_map(u.x, fc) for u in users]
+        res = oneshot.one_shot_clustering(feats, n_clusters=2,
+                                          cfg=SimilarityConfig(top_k=8))
+        r = res.similarity
+        tid = np.asarray([u.task_id for u in users])
+        same = r[tid[:, None] == tid[None, :]]
+        cross = r[tid[:, None] != tid[None, :]]
+        assert same.min() > cross.max() + 0.3
+
+    def test_fmnist_three_task_unbalanced(self):
+        """Fig. 3 setup: 3 tasks, 5/3/2 users, unbalanced samples."""
+        users = part.paper_fmnist_three_task(seed=0, scale=0.25)
+        feats = [u.x for u in users]          # identity Phi (FMNIST path)
+        res = oneshot.one_shot_clustering(feats, n_clusters=3,
+                                          cfg=SimilarityConfig(top_k=8))
+        acc = clu.clustering_accuracy(res.labels, [u.task_id for u in users])
+        assert acc == 1.0
+
+    def test_cross_dataset_similarity_table2(self):
+        """Table II: vehicle users from two datasets score higher with
+        each other than with an unrelated-class user."""
+        shared = 777
+        # user 1: CIFAR-10 vehicles; user 2: CIFAR-100 vehicles (shared
+        # task subspace); user 3: CIFAR-100 other classes.
+        x1, _ = syn.make_task_dataset(syn.CIFAR_LIKE, [0, 1, 8, 9], 80,
+                                      seed=1, task_of_class={c: 0 for c in
+                                                             (0, 1, 8, 9)},
+                                      shared_task_seed=shared)
+        x2, _ = syn.make_task_dataset(syn.CIFAR100_LIKE, [10, 11], 120,
+                                      seed=2, task_of_class={10: 0, 11: 0},
+                                      shared_task_seed=shared)
+        x3, _ = syn.make_task_dataset(syn.CIFAR100_LIKE, [40, 41], 120,
+                                      seed=3, task_of_class={40: 1, 41: 1},
+                                      shared_task_seed=shared)
+        fc = feat.FeatureConfig(kind="random_projection", d=128)
+        feats = [feat.feature_map(x, fc) for x in (x1, x2, x3)]
+        res = oneshot.one_shot_clustering(feats, n_clusters=2,
+                                          cfg=SimilarityConfig(top_k=8))
+        assert res.similarity[0, 1] > res.similarity[0, 2] + 0.1
+
+    def test_few_eigenvectors_suffice_fig4(self):
+        """Fig. 4: top-5 eigenvectors already separate the tasks."""
+        users = part.paper_fmnist_three_task(seed=0, scale=0.25)
+        feats = [u.x for u in users]
+        true = [u.task_id for u in users]
+        res = oneshot.one_shot_clustering(feats, n_clusters=3,
+                                          cfg=SimilarityConfig(top_k=5))
+        assert clu.clustering_accuracy(res.labels, true) == 1.0
+
+
+class TestCommLedger:
+    def test_ledger_accounting(self):
+        led = oneshot.CommLedger(n_users=10, d=784, top_k=5,
+                                 model_params=101_770)
+        # paper §III: (5 x 784) instead of (784 x 784)
+        assert led.per_user_upload == 4 * (5 * 784 + 10)
+        assert led.per_user_download == 4 * 9 * 5 * 784
+        assert led.summary()["oneshot_vs_iterative_ratio"] < 0.04
+
+    def test_oneshot_cheaper_than_weight_exchange(self):
+        users = part.paper_fmnist_three_task(seed=0, scale=0.1)
+        res = oneshot.one_shot_clustering(
+            [u.x for u in users], n_clusters=3,
+            cfg=SimilarityConfig(top_k=5),
+            model_params=784 * 32 + 32 + 32 * 10 + 10)
+        s = res.ledger.summary()
+        assert s["per_user_upload_bytes"] < \
+            s["iterative_per_round_upload_bytes"]
+
+
+class TestFeatureMaps:
+    @pytest.mark.parametrize("kind,kwargs", [
+        ("identity", {}),
+        ("random_projection", {"d": 64}),
+        ("random_conv", {"d": 128, "image_hw": (32, 32, 3)}),
+    ])
+    def test_shapes(self, kind, kwargs, rng):
+        x = rng.standard_normal((20, 3072)).astype(np.float32)
+        fc = feat.FeatureConfig(kind=kind, **kwargs)
+        out = feat.feature_map(x, fc)
+        assert out.shape[0] == 20
+        assert np.isfinite(out).all()
+
+    def test_pca(self, rng):
+        probe = rng.standard_normal((100, 50)).astype(np.float32)
+        x = rng.standard_normal((20, 50)).astype(np.float32)
+        out = feat.feature_map(x, feat.FeatureConfig(kind="pca", d=8,
+                                                     probe=probe))
+        assert out.shape == (20, 8)
+
+    def test_shared_across_users(self, rng):
+        """Phi must be identical for every user (protocol requirement)."""
+        x = rng.standard_normal((10, 100)).astype(np.float32)
+        fc = feat.FeatureConfig(kind="random_projection", d=16, seed=42)
+        np.testing.assert_array_equal(feat.feature_map(x, fc),
+                                      feat.feature_map(x, fc))

@@ -1,0 +1,144 @@
+"""Unit + property tests for the similarity protocol (paper Eqs. 1-5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import similarity as sim
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _feats(rng, n=64, d=16, scale=1.0):
+    return jnp.asarray(rng.standard_normal((n, d)) * scale, jnp.float32)
+
+
+class TestGram:
+    def test_gram_matches_definition(self, rng):
+        f = _feats(rng)
+        g = sim.gram(f)
+        expected = np.asarray(f).T @ np.asarray(f) / f.shape[0]
+        np.testing.assert_allclose(np.asarray(g), expected, rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_gram_psd(self, rng):
+        g = sim.gram(_feats(rng))
+        eig = np.linalg.eigvalsh(np.asarray(g))
+        assert eig.min() > -1e-4
+
+    def test_gram_ragged_n_valid(self, rng):
+        f = np.asarray(_feats(rng, n=32))
+        padded = np.zeros((64, f.shape[1]), np.float32)
+        padded[:32] = f
+        g_pad = sim.gram(jnp.asarray(padded), n_valid=32)
+        g_true = sim.gram(jnp.asarray(f))
+        np.testing.assert_allclose(np.asarray(g_pad), np.asarray(g_true),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestSpectrum:
+    def test_descending_order_topk(self, rng):
+        g = sim.gram(_feats(rng, n=128, d=24))
+        lam, v = sim.spectrum(g, top_k=8)
+        assert lam.shape == (8,) and v.shape == (24, 8)
+        lam_np = np.asarray(lam)
+        assert (np.diff(lam_np) <= 1e-6).all()
+        assert (lam_np >= 0).all()
+
+    def test_eigen_equation(self, rng):
+        g = sim.gram(_feats(rng, d=12))
+        lam, v = sim.spectrum(g)
+        gv = np.asarray(g) @ np.asarray(v)
+        lv = np.asarray(v) * np.asarray(lam)[None, :]
+        np.testing.assert_allclose(gv, lv, atol=1e-4)
+
+
+class TestRelevance:
+    def test_self_relevance_is_one(self, rng):
+        """r(i, i) = 1: projecting your own eigenvectors recovers your own
+        eigenvalues exactly (paper Eq. 2-4)."""
+        f = _feats(rng, n=128, d=16)
+        lam, v, g = sim.user_signature(f, sim.SimilarityConfig(top_k=8))
+        lam_hat = sim.cross_project(g, v)
+        r = sim.relevance(lam, lam_hat)
+        assert abs(float(r) - 1.0) < 1e-4
+
+    def test_range(self, rng):
+        for i in range(5):
+            f1 = _feats(rng, scale=1.0 + i)
+            f2 = _feats(rng, scale=3.0 - i * 0.5)
+            l1, v1, g1 = sim.user_signature(f1, sim.SimilarityConfig(top_k=4))
+            lam_hat = sim.cross_project(g1, sim.user_signature(
+                f2, sim.SimilarityConfig(top_k=4))[1])
+            r = float(sim.relevance(l1, lam_hat))
+            assert 0.0 < r <= 1.0 + 1e-6
+
+    @given(scale=st.floats(0.1, 10.0))
+    @settings(max_examples=20, deadline=None)
+    def test_relevance_bounded_property(self, scale):
+        """Property: relevance in (0, 1] for arbitrary PSD pairs."""
+        rng = np.random.default_rng(int(scale * 1000))
+        lam = jnp.asarray(np.abs(rng.standard_normal(8)) * scale + 1e-6)
+        lam_hat = jnp.asarray(np.abs(rng.standard_normal(8)) + 1e-6)
+        r = float(sim.relevance(lam, lam_hat))
+        assert 0.0 < r <= 1.0 + 1e-6
+
+    def test_eig_floor_guards_tiny_eigenvalues(self):
+        """Paper §III: one tiny eigenvalue must not zero out the product."""
+        lam = jnp.asarray([1.0, 1.0, 1.0, 1e-12])
+        lam_hat = jnp.asarray([1.0, 1.0, 1.0, 1.0])
+        r_floored = float(sim.relevance(lam, lam_hat, eig_floor=1e-6))
+        r_raw = float(sim.relevance(lam, lam_hat, eig_floor=1e-30))
+        assert r_floored > 0.02 > r_raw
+
+
+class TestSimilarityMatrix:
+    def test_symmetric_unit_diag(self, rng):
+        feats = jnp.asarray(rng.standard_normal((6, 64, 16)), jnp.float32)
+        r = sim.similarity_matrix(feats, sim.SimilarityConfig(top_k=8))
+        r_np = np.asarray(r)
+        np.testing.assert_allclose(r_np, r_np.T, atol=1e-5)
+        np.testing.assert_allclose(np.diag(r_np), 1.0, atol=1e-4)
+
+    def test_same_distribution_scores_higher(self, rng):
+        """Block structure: same-task users >> cross-task users (Table I)."""
+        basis_a = np.linalg.qr(rng.standard_normal((16, 4)))[0]
+        basis_b = np.linalg.qr(rng.standard_normal((16, 4)))[0]
+        users = []
+        for basis in (basis_a, basis_a, basis_b, basis_b):
+            z = rng.standard_normal((128, 4)).astype(np.float32)
+            users.append(z @ basis.T.astype(np.float32)
+                         + 0.05 * rng.standard_normal((128, 16)
+                                                      ).astype(np.float32))
+        r = np.asarray(sim.similarity_matrix(
+            jnp.asarray(np.stack(users)), sim.SimilarityConfig(top_k=4)))
+        in_task = (r[0, 1] + r[2, 3]) / 2
+        cross = (r[0, 2] + r[0, 3] + r[1, 2] + r[1, 3]) / 4
+        assert in_task > cross + 0.2
+
+    def test_permutation_equivariance(self, rng):
+        feats = rng.standard_normal((5, 64, 12)).astype(np.float32)
+        cfg = sim.SimilarityConfig(top_k=6)
+        r = np.asarray(sim.similarity_matrix(jnp.asarray(feats), cfg))
+        perm = np.asarray([3, 1, 4, 0, 2])
+        r_perm = np.asarray(sim.similarity_matrix(jnp.asarray(feats[perm]),
+                                                  cfg))
+        np.testing.assert_allclose(r_perm, r[np.ix_(perm, perm)], atol=1e-4)
+
+    def test_rotation_invariance_of_self_block(self, rng):
+        """Relevance depends on spectra: rotating the feature space of ALL
+        users jointly leaves R unchanged."""
+        feats = rng.standard_normal((4, 96, 12)).astype(np.float32)
+        q = np.linalg.qr(rng.standard_normal((12, 12)))[0].astype(np.float32)
+        cfg = sim.SimilarityConfig(top_k=6)
+        r1 = np.asarray(sim.similarity_matrix(jnp.asarray(feats), cfg))
+        r2 = np.asarray(sim.similarity_matrix(jnp.asarray(feats @ q), cfg))
+        np.testing.assert_allclose(r1, r2, atol=5e-3)
+
+    def test_ragged_list_input(self, rng):
+        feats = [rng.standard_normal((n, 10)).astype(np.float32)
+                 for n in (50, 80, 64)]
+        r = sim.similarity_matrix(feats, sim.SimilarityConfig(top_k=4))
+        assert r.shape == (3, 3)
+        assert np.isfinite(np.asarray(r)).all()
