@@ -1,37 +1,56 @@
-"""Kernel micro-benchmarks: jnp reference wall time on CPU (the Pallas
-kernels target TPU and are validated in interpret mode by the test suite;
-interpret-mode wall time is not meaningful, so we time the reference path
-and report the kernels' validation status + arithmetic intensity)."""
+"""Kernel + engine micro-benchmarks.
+
+jnp reference wall time on CPU (the Pallas kernels target TPU and are
+validated in interpret mode by the test suite; interpret-mode wall time is
+not meaningful, so we time the reference path and report the kernels'
+validation status + arithmetic intensity), plus two engine-level rows:
+
+* ``engine_blockwise_*``: the streaming ``ProtocolEngine`` computing R for
+  thousands of users on CPU with peak Gram memory O(block_users * d^2).
+* ``lps_round_*``: the vectorized (vmap + scan, one jit) LPS round vs the
+  seed's per-client Python loop — the MT-HFL trainer hot path.
+
+Runs standalone too:  ``PYTHONPATH=src:. python benchmarks/bench_kernels.py
+--quick`` (CI smoke: shrunken shapes, same code paths).
+"""
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
+from repro.core import similarity as sim
+from repro.core.engine import ProtocolEngine
+from repro.fed import client as fclient
+from repro.fed import hierarchy as hier
 from repro.kernels.eigproject import ops as proj_ops
 from repro.kernels.eigproject.ref import project_norms_ref
 from repro.kernels.gram import ops as gram_ops
 from repro.kernels.gram.ref import gram_ref
+from repro.kernels.gram_project import ops as gp_ops
+from repro.kernels.gram_project.ref import gram_project_ref
+from repro.models import mlp
 
 
-def run() -> list[str]:
-    rng = np.random.default_rng(0)
-    rows = []
-
-    n, d = 2048, 256
+def _bench_gram(rng, quick: bool) -> str:
+    n, d = (512, 128) if quick else (2048, 256)
     x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
     ref_us = common.time_us(lambda: gram_ref(x).block_until_ready())
     pall = gram_ops.gram_matrix(x, interpret=True)
     ok = bool(np.allclose(np.asarray(pall), np.asarray(gram_ref(x)),
                           rtol=1e-3, atol=1e-2))
     flops = 2 * n * d * d
-    rows.append(common.row(
-        "kernel_gram_2048x256", ref_us, ref_gflops=round(
+    return common.row(
+        f"kernel_gram_{n}x{d}", ref_us, ref_gflops=round(
             flops / ref_us / 1e3, 2), pallas_validates=ok,
-        arithmetic_intensity=round(flops / (4 * (n * d + d * d)), 1)))
+        arithmetic_intensity=round(flops / (4 * (n * d + d * d)), 1))
 
-    d, k = 256, 128
+
+def _bench_eigproject(rng, quick: bool) -> str:
+    d, k = (128, 64) if quick else (256, 128)
     g = jnp.asarray(rng.standard_normal((d, d)), jnp.float32)
     v = jnp.asarray(rng.standard_normal((d, k)), jnp.float32)
     ref_us = common.time_us(
@@ -40,7 +59,113 @@ def run() -> list[str]:
     ok = bool(np.allclose(np.asarray(pall),
                           np.asarray(project_norms_ref(g, v)),
                           rtol=1e-3, atol=1e-2))
-    rows.append(common.row(
-        "kernel_eigproject_256x128", ref_us, pallas_validates=ok,
-        fusion_saving_bytes=4 * d * k))  # the G@V intermediate never hits HBM
-    return rows
+    return common.row(
+        f"kernel_eigproject_{d}x{k}", ref_us, pallas_validates=ok,
+        fusion_saving_bytes=4 * d * k)  # the G@V intermediate never hits HBM
+
+
+def _bench_gram_project(rng, quick: bool) -> str:
+    n, d, k = (128, 128, 64) if quick else (256, 256, 256)
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((d, k)), jnp.float32)
+    ref_us = common.time_us(
+        lambda: gram_project_ref(x, v).block_until_ready())
+    pall = gp_ops.gram_project(x, v, interpret=True)
+    ok = bool(np.allclose(np.asarray(pall),
+                          np.asarray(gram_project_ref(x, v)),
+                          rtol=1e-3, atol=1e-2))
+    return common.row(
+        f"kernel_gram_project_{n}x{d}x{k}", ref_us, pallas_validates=ok,
+        gram_bytes_never_materialized=4 * d * d)
+
+
+def _bench_engine_blockwise(rng, quick: bool) -> str:
+    """Streaming R at a scale the dense path's Gram stack makes painful.
+
+    Acceptance shape: N=2048 users, d=64, never materializing the
+    (N, d, d) stack — peak Gram residency is block_users tiles.
+    """
+    n_users, n, d, k, block = ((256, 32, 64, 4, 64) if quick
+                               else (2048, 32, 64, 4, 128))
+    feats = jnp.asarray(rng.standard_normal((n_users, n, d)) * 0.3,
+                        jnp.float32)
+    cfg = sim.SimilarityConfig(top_k=k, block_users=block)
+    eng = ProtocolEngine(cfg)
+    result = {}
+
+    def once():
+        result["r"] = eng.similarity(feats).block_until_ready()
+
+    us = common.time_us(once, n_iter=1, warmup=1)
+    big_r = np.asarray(result["r"])
+    return common.row(
+        f"engine_blockwise_n{n_users}_d{d}", us,
+        finite=bool(np.isfinite(big_r).all()),
+        peak_gram_mb=round(block * d * d * 4 / 2**20, 2),
+        dense_gram_mb=round(n_users * d * d * 4 / 2**20, 2))
+
+
+def _bench_lps_round(rng, quick: bool) -> str:
+    """Vectorized LPS round vs the seed per-client Python loop."""
+    n_clients = 8 if quick else 32
+    n_samples, m, steps, batch = 256, 64, 10, 32
+    mcfg = mlp.PaperMLPConfig(m=m, hidden=32, n_classes=4)
+    params = mlp.init(mcfg, jax.random.PRNGKey(0))
+    loss_fn = mlp.loss_fn(mcfg)
+    ccfg = fclient.ClientConfig(lr=0.05)
+    xs = [rng.standard_normal((n_samples, m)).astype(np.float32)
+          for _ in range(n_clients)]
+    ys = [rng.integers(0, 4, n_samples).astype(np.int32)
+          for _ in range(n_clients)]
+    ns = [n_samples] * n_clients
+    # One shared rng per path, same consumption order, so both paths train
+    # on IDENTICAL batches and the speedup compares the same workload.
+    loop_rng = np.random.default_rng(7)
+    per_client = [fclient.make_batches(x, y, batch, steps, loop_rng)
+                  for x, y in zip(xs, ys)]
+    stacked = fclient.make_batch_stack(list(zip(xs, ys)), batch, steps,
+                                       np.random.default_rng(7))
+
+    def loop_round():
+        client_params = []
+        for b in per_client:
+            new_p, _ = fclient.local_update(params, b, loss_fn, ccfg)
+            client_params.append(new_p)
+        return jax.block_until_ready(hier.lps_round(client_params, ns))
+
+    def fused_round():
+        new_p, _ = fclient.fused_lps_round(
+            params, stacked, jnp.asarray(ns, jnp.float32), loss_fn, ccfg)
+        return jax.block_until_ready(new_p)
+
+    parity = all(
+        np.allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+        for a, b in zip(jax.tree.leaves(loop_round()),
+                        jax.tree.leaves(fused_round())))
+    loop_us = common.time_us(loop_round, n_iter=3)
+    fused_us = common.time_us(fused_round, n_iter=3)
+    return common.row(
+        f"lps_round_{n_clients}clients", fused_us,
+        loop_us=round(loop_us, 1),
+        speedup_vs_loop=round(loop_us / fused_us, 2),
+        matches_loop=parity)
+
+
+def run(quick: bool = False) -> list[str]:
+    rng = np.random.default_rng(0)
+    return [
+        _bench_gram(rng, quick),
+        _bench_eigproject(rng, quick),
+        _bench_gram_project(rng, quick),
+        _bench_engine_blockwise(rng, quick),
+        _bench_lps_round(rng, quick),
+    ]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: shrunken shapes, same code paths")
+    args = ap.parse_args()
+    for r in run(quick=args.quick):
+        print(r, flush=True)

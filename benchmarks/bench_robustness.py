@@ -8,25 +8,18 @@ accuracy on the FMNIST three-task layout.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
 from repro.core import clustering as clu
 from repro.core import similarity as sim
+from repro.core.engine import ProtocolEngine
 from repro.data import partition as dpart
 
 
 def _cluster_with_noise(feats, true, sigma: float, top_k: int = 8) -> float:
-    counts = [f.shape[0] for f in feats]
-    n_max = max(counts)
-    d = feats[0].shape[1]
-    padded = np.zeros((len(feats), n_max, d), np.float32)
-    for i, f in enumerate(feats):
-        padded[i, : f.shape[0]] = f
-    grams = sim.batched_gram(jnp.asarray(padded),
-                             jnp.asarray(counts, jnp.float32))
-    lam, v = jax.vmap(lambda g: sim.spectrum(g, top_k))(grams)
+    engine = ProtocolEngine(sim.SimilarityConfig(top_k=top_k))
+    lam, v, grams = engine.signatures(feats)
     if sigma > 0:
         v = sim.perturb_eigenvectors(v, sigma, jax.random.PRNGKey(17))
     r = sim.relevance_matrix(grams, lam, v)

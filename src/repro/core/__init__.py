@@ -1,8 +1,10 @@
 """Paper core: one-shot data-similarity clustering for MT-HFL."""
-from repro.core.similarity import (SimilarityConfig, gram, spectrum,
-                                   cross_project, relevance,
+from repro.core.similarity import (SimilarityConfig, pad_ragged, gram,
+                                   spectrum, cross_project, relevance,
                                    relevance_matrix, symmetrize,
                                    similarity_matrix)
+from repro.core.engine import (ProtocolEngine, ProtocolResult, BACKENDS,
+                               make_user_mesh)
 from repro.core.clustering import (hac, cut, hac_clusters, random_clusters,
                                    oracle_clusters, spectral_clusters,
                                    clustering_accuracy, adjusted_rand_index,

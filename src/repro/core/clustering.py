@@ -167,6 +167,11 @@ def random_clusters(n_users: int, n_clusters: int,
         labels = np.repeat(np.arange(len(cluster_sizes)), cluster_sizes)
         rng.shuffle(labels)
         return labels.astype(np.int32)
+    if not 1 <= n_clusters <= n_users:
+        # every cluster must be non-empty, so n_clusters > n_users would
+        # spin the redraw loop forever
+        raise ValueError(f"n_clusters must be in [1, {n_users}], "
+                         f"got {n_clusters}")
     while True:
         labels = rng.integers(0, n_clusters, size=n_users).astype(np.int32)
         if len(np.unique(labels)) == n_clusters:

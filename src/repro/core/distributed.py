@@ -1,68 +1,29 @@
-"""Distributed one-shot clustering protocol (shard_map version).
+"""Distributed one-shot clustering protocol (shard_map backend).
 
-Maps the paper's star-topology message pattern onto TPU collectives:
-
-  paper                               | here
-  ------------------------------------|---------------------------------
-  user i broadcasts V_i to all users  | all_gather of (k, d) blocks over
-                                      | the user-sharded mesh axis
-  user i uploads row r(i, .) to GPS   | all_gather of relevance rows
-  GPS symmetrizes R, runs HAC         | every device holds R; HAC runs
-                                      | host-side on the (tiny) N x N R
+Compatibility surface over ``repro.core.engine``: the shard_map body now
+lives in ``engine._sharded_protocol`` and is selected with
+``SimilarityConfig(backend="shard_map")`` — this module keeps the original
+``distributed_similarity(features, mesh, ...)`` call signature for
+existing callers and tests.
 
 Users are sharded over one mesh axis (default ``"data"``).  Per-device
 communication is exactly the paper's accounting: upload O(k*d), download
 O(N*k*d) for the signature exchange, plus the O(N^2) relevance gather —
-independent of model size, which is the paper's point.
-
-The heavy compute (Gram, eigh, cross-projection) runs fully sharded; only
-eigenvector blocks cross the interconnect.
+independent of model size, which is the paper's point.  The heavy compute
+(Gram, eigh, cross-projection) runs fully sharded; only eigenvector blocks
+cross the interconnect.
 """
 from __future__ import annotations
 
-from functools import partial
+import dataclasses
 
 import jax
-import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core import similarity as sim
+from repro.core.engine import ProtocolEngine, make_user_mesh
 
 __all__ = ["distributed_similarity", "make_user_mesh"]
-
-
-def make_user_mesh(axis_name: str = "data") -> Mesh:
-    """A 1-D mesh over all local devices for user sharding (tests/demos)."""
-    import numpy as np
-
-    devs = np.asarray(jax.devices())
-    return Mesh(devs, (axis_name,))
-
-
-def _protocol(features, n_valid, *, axis: str, top_k: int, eig_floor: float,
-              impl: str):
-    """shard_map body.  ``features (N_local, n, d)`` per device."""
-    # --- Phase 1: local spectral signatures (no communication). ---------
-    grams = sim.batched_gram(features, n_valid, impl=impl)        # (Nl,d,d)
-    lam, v = jax.vmap(lambda g: sim.spectrum(g, top_k))(grams)    # (Nl,k),(Nl,d,k)
-
-    # --- Phase 2: signature exchange == paper's "share V_i". ------------
-    # all_gather over the user axis; tiled=True concatenates shards so the
-    # result is the full (N, ...) signature table on every device.
-    lam_all = jax.lax.all_gather(lam, axis, tiled=True)           # (N, k)
-    v_all = jax.lax.all_gather(v, axis, tiled=True)               # (N, d, k)
-
-    # --- Phase 3: local relevance rows (no communication). --------------
-    r_rows = sim.relevance_matrix(grams, lam, v_all, eig_floor,
-                                  impl=impl)                      # (Nl, N)
-    # relevance_matrix pairs grams[i] with lams[i]; here lam is local and
-    # v_all is global, which is what we want: row i uses MY gram+spectrum
-    # against EVERY user's eigenvectors.
-
-    # --- Phase 4: GPS assembly == all_gather of rows + symmetrize. ------
-    r_full = jax.lax.all_gather(r_rows, axis, tiled=True)         # (N, N)
-    return sim.symmetrize(r_full)
 
 
 def distributed_similarity(features: jax.Array, mesh: Mesh,
@@ -74,28 +35,8 @@ def distributed_similarity(features: jax.Array, mesh: Mesh,
     ``features (N, n, d)`` with ``N`` divisible by the axis size.  Returns
     the replicated ``R (N, N)``.
     """
-    cfg = cfg or sim.SimilarityConfig()
-    n_users = features.shape[0]
-    axis_size = mesh.shape[axis]
-    if n_users % axis_size:
-        raise ValueError(
-            f"n_users={n_users} not divisible by mesh axis {axis!r}"
-            f" of size {axis_size}")
-    if n_valid is None:
-        n_valid = jnp.full((n_users,), features.shape[1], dtype=jnp.float32)
-    top_k = cfg.top_k or features.shape[-1]
-
-    body = partial(_protocol, axis=axis, top_k=top_k,
-                   eig_floor=cfg.eig_floor, impl=cfg.impl)
-    other_axes = tuple(n for n in mesh.axis_names if n != axis)
-    spec_in = P(axis)
-    spec_out = P()  # replicated R
-    fn = shard_map(body, mesh=mesh,
-                   in_specs=(spec_in, spec_in),
-                   out_specs=spec_out,
-                   check_rep=False)
-    with mesh:
-        feats = jax.device_put(features,
-                               NamedSharding(mesh, P(axis)))
-        nv = jax.device_put(n_valid, NamedSharding(mesh, P(axis)))
-        return jax.jit(fn)(feats, nv)
+    cfg = dataclasses.replace(cfg or sim.SimilarityConfig(),
+                              backend="shard_map", block_users=0,
+                              mesh_axis=axis)
+    return ProtocolEngine(cfg, mesh=mesh).similarity(features,
+                                                     n_valid=n_valid)

@@ -1,0 +1,310 @@
+"""Backend-pluggable one-shot protocol engine (paper Algorithm 2).
+
+The ``ProtocolEngine`` is the single entry point for the similarity
+protocol: signature computation (Eq. 1-2), exchange, relevance (Eq. 3-4)
+and symmetrization (Eq. 5).  ``oneshot.one_shot_clustering``,
+``similarity.similarity_matrix``, ``distributed.distributed_similarity``,
+the benchmarks and ``repro.launch.protocol`` all route through it; the
+backend is picked by ``SimilarityConfig``, not by call-site forking:
+
+  backend      | execution
+  -------------|----------------------------------------------------------
+  "jnp"        | single host, reference jnp maths
+  "pallas"     | single host, Pallas kernels for Gram / cross-projection
+  "shard_map"  | users sharded over a mesh axis; the paper's star-topology
+               | message pattern becomes two all_gathers (signatures, rows)
+
+Orthogonally, ``block_users > 0`` turns on **blockwise streaming** for the
+single-host backends: users are processed in tiles, per-tile Grams are
+eigendecomposed and discarded, and cross-projection against the running
+signature table is Gram-free (``||G_i v|| = ||F_i^T (F_i v)|| / n_i``,
+fused in ``repro.kernels.gram_project`` on the Pallas path).  Peak memory
+drops from O(N * d^2) to O(block_users * d^2) + the O(N * d * k) signature
+table — exactly what each user receives over the air anyway — so
+multi-thousand-user similarity fits on one host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import similarity as sim
+
+__all__ = ["ProtocolEngine", "ProtocolResult", "BACKENDS", "make_user_mesh"]
+
+BACKENDS = ("jnp", "pallas", "shard_map")
+
+
+def make_user_mesh(axis_name: str = "data") -> Mesh:
+    """A 1-D mesh over all local devices for user sharding (tests/demos)."""
+    devs = np.asarray(jax.devices())
+    return Mesh(devs, (axis_name,))
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtocolResult:
+    """Everything the protocol produces before clustering."""
+
+    relevance: jax.Array          # (N, N) directed r(i, j)
+    similarity: jax.Array         # (N, N) symmetrized R
+    n_users: int
+    d: int
+    top_k: int
+
+
+# ---------------------------------------------------------------------------
+# Dense path: one jit, full (N, d, d) Gram stack (fast for modest N)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("top_k", "impl"))
+def _dense_protocol(features, n_valid, top_k, eig_floor, impl):
+    grams = sim.batched_gram(features, n_valid, impl=impl)
+    lam, v = jax.vmap(lambda g: sim.spectrum(g, top_k))(grams)
+    r = sim.relevance_matrix(grams, lam, v, eig_floor, impl=impl)
+    return r, sim.symmetrize(r)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise streaming path: tiles of users, Gram-free cross-projection
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("top_k", "impl"))
+def _tile_signatures(features, n_valid, top_k, impl):
+    """One tile's shared signatures; the (block, d, d) Grams die here."""
+    grams = sim.batched_gram(features, n_valid, impl=impl)
+    return jax.vmap(lambda g: sim.spectrum(g, top_k))(grams)
+
+
+@partial(jax.jit, static_argnames=("top_k", "impl"))
+def _tile_rows(features, n_valid, lam_tile, v_flat, eig_floor, top_k, impl):
+    """Relevance rows for one user tile against the full signature table.
+
+    ``v_flat (d, N_pad * k)`` stacks every user's eigenvectors column-wise,
+    so one matmul pair per user projects ALL signatures at once —
+    ``||G_i v|| = ||F_i^T (F_i v)|| / n_i`` (no (d, d) Gram).
+    """
+
+    def one(args):
+        f, nv, lam_i = args
+        if impl == "pallas":
+            from repro.kernels.gram_project import ops as gp_ops
+
+            lam_hat = gp_ops.gram_project(f, v_flat, n_valid=nv)
+        else:
+            from repro.kernels.gram_project.ref import gram_project_ref
+
+            lam_hat = gram_project_ref(f, v_flat, n_valid=nv)
+        lam_hat = lam_hat.reshape(-1, top_k)                 # (N_pad, k)
+        return jax.vmap(
+            lambda lh: sim.relevance(lam_i, lh, eig_floor))(lam_hat)
+
+    return jax.lax.map(one, (features, n_valid, lam_tile))
+
+
+# ---------------------------------------------------------------------------
+# shard_map path: the paper's message pattern on TPU collectives
+# ---------------------------------------------------------------------------
+
+def _sharded_protocol(features, n_valid, *, axis: str, top_k: int,
+                      eig_floor: float, impl: str):
+    """shard_map body.  ``features (N_local, n, d)`` per device.
+
+      paper                               | here
+      ------------------------------------|-------------------------------
+      user i broadcasts V_i to all users  | all_gather of (k, d) blocks
+      user i uploads row r(i, .) to GPS   | all_gather of relevance rows
+      GPS symmetrizes R, runs HAC         | every device holds R; HAC runs
+                                          | host-side on the tiny N x N R
+    """
+    # Phase 1: local spectral signatures (no communication).
+    grams = sim.batched_gram(features, n_valid, impl=impl)        # (Nl,d,d)
+    lam, v = jax.vmap(lambda g: sim.spectrum(g, top_k))(grams)
+
+    # Phase 2: signature exchange == paper's "share V_i".
+    v_all = jax.lax.all_gather(v, axis, tiled=True)               # (N, d, k)
+
+    # Phase 3: local relevance rows — row i uses MY gram + spectrum
+    # against EVERY user's eigenvectors (Algorithm 2 lines 7-12).
+    r_rows = sim.relevance_matrix(grams, lam, v_all, eig_floor,
+                                  impl=impl)                      # (Nl, N)
+
+    # Phase 4: GPS assembly == all_gather of rows + symmetrize.
+    r_full = jax.lax.all_gather(r_rows, axis, tiled=True)         # (N, N)
+    return r_full, sim.symmetrize(r_full)
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+class ProtocolEngine:
+    """One object that owns the whole one-shot protocol.
+
+    ``cfg.backend`` selects the execution strategy; ``cfg.block_users``
+    selects dense vs streaming on the single-host backends.  A ``mesh`` is
+    only consulted by the shard_map backend (defaults to a 1-D mesh over
+    all local devices).
+    """
+
+    def __init__(self, cfg: sim.SimilarityConfig | None = None,
+                 mesh: Mesh | None = None):
+        cfg = cfg or sim.SimilarityConfig()
+        if cfg.backend not in BACKENDS:
+            raise ValueError(
+                f"backend must be one of {BACKENDS}, got {cfg.backend!r}")
+        if cfg.block_users < 0:
+            raise ValueError(f"block_users must be >= 0, got "
+                             f"{cfg.block_users}")
+        if cfg.block_users and cfg.backend == "shard_map":
+            raise ValueError("blockwise streaming (block_users > 0) is a "
+                             "single-host mode; the shard_map backend "
+                             "already tiles users over devices")
+        self.cfg = cfg
+        self.mesh = mesh
+
+    @property
+    def impl(self) -> str:
+        """Kernel implementation: the pallas backend forces Pallas kernels."""
+        return "pallas" if self.cfg.backend == "pallas" else self.cfg.impl
+
+    def _top_k(self, d: int) -> int:
+        """Effective signature width: ``0`` means all d, and a Gram only has
+        d eigenpairs however large ``cfg.top_k`` is."""
+        return min(self.cfg.top_k or d, d)
+
+    def prepare(self, features, n_valid=None
+                ) -> tuple[jax.Array, jax.Array]:
+        """Normalize any accepted input form to ``(padded, n_valid)``.
+
+        Ragged lists of ``(n_i, d)`` arrays are zero-padded via
+        ``sim.pad_ragged``; padded arrays get a full-length ``n_valid``
+        unless the true counts are supplied.
+        """
+        if not isinstance(features, (jax.Array, np.ndarray)):
+            if n_valid is not None:
+                raise ValueError("n_valid is derived from ragged input; "
+                                 "pass one or the other")
+            return sim.pad_ragged(features)
+        features = jnp.asarray(features)
+        if n_valid is None:
+            n_valid = jnp.full((features.shape[0],), features.shape[1],
+                               dtype=jnp.float32)
+        return features, jnp.asarray(n_valid, jnp.float32)
+
+    # -- protocol stages ----------------------------------------------------
+
+    def signatures(self, features, n_valid=None
+                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Per-user ``(lam (N, k), V (N, d, k), G (N, d, d))`` — dense only.
+
+        ``lam``/``V`` are what users share; ``G`` stays on-device and is
+        exposed for robustness studies (e.g. perturbed-eigenvector sweeps).
+        Materializing every Gram is inherently dense, so non-dense configs
+        are rejected rather than silently run dense.
+        """
+        if self.cfg.backend == "shard_map" or self.cfg.block_users:
+            raise ValueError(
+                "signatures() materializes the full (N, d, d) Gram stack "
+                "and is only available on the dense single-host config "
+                f"(got backend={self.cfg.backend!r}, "
+                f"block_users={self.cfg.block_users})")
+        feats, nv = self.prepare(features, n_valid)
+        grams = sim.batched_gram(feats, nv, impl=self.impl)
+        lam, v = jax.vmap(
+            lambda g: sim.spectrum(g, self._top_k(feats.shape[-1])))(grams)
+        return lam, v, grams
+
+    def relevance_and_similarity(self, features, n_valid=None
+                                 ) -> tuple[jax.Array, jax.Array]:
+        """Run the full protocol -> ``(r (N, N) directed, R symmetrized)``."""
+        feats, nv = self.prepare(features, n_valid)
+        return self._dispatch(feats, nv)
+
+    def similarity(self, features, n_valid=None) -> jax.Array:
+        """``R (N, N)`` — the matrix the GPS feeds to HAC."""
+        return self.relevance_and_similarity(features, n_valid)[1]
+
+    def run(self, features, n_valid=None) -> ProtocolResult:
+        feats, nv = self.prepare(features, n_valid)
+        r, big_r = self._dispatch(feats, nv)
+        n_users, _, d = feats.shape
+        return ProtocolResult(relevance=r, similarity=big_r,
+                              n_users=n_users, d=d, top_k=self._top_k(d))
+
+    def _dispatch(self, feats: jax.Array, nv: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+        """Backend dispatch on already-``prepare``d inputs."""
+        if self.cfg.backend == "shard_map":
+            return self._run_shard_map(feats, nv)
+        if self.cfg.block_users:
+            return self._run_blockwise(feats, nv)
+        return _dense_protocol(feats, nv, self._top_k(feats.shape[-1]),
+                               self.cfg.eig_floor, self.impl)
+
+    # -- backends -----------------------------------------------------------
+
+    def _run_blockwise(self, feats: jax.Array, nv: jax.Array
+                       ) -> tuple[jax.Array, jax.Array]:
+        n_users, n, d = feats.shape
+        block = min(self.cfg.block_users, n_users)
+        top_k = self._top_k(d)
+        pad = (-n_users) % block
+        if pad:
+            # Phantom users (zero features, n_valid 1) square off the last
+            # tile so every tile jit-compiles once; their rows/cols are
+            # sliced away below.
+            feats = jnp.concatenate(
+                [feats, jnp.zeros((pad, n, d), feats.dtype)])
+            nv = jnp.concatenate([nv, jnp.ones((pad,), nv.dtype)])
+        n_total = n_users + pad
+
+        # Pass 1 — signature table, one tile at a time.  O(block * d^2)
+        # live Grams; the table itself is O(N * d * k), the same payload
+        # every user downloads in the paper's exchange.
+        lam_tiles, v_tiles = [], []
+        for s in range(0, n_total, block):
+            lam_t, v_t = _tile_signatures(feats[s:s + block],
+                                          nv[s:s + block], top_k, self.impl)
+            lam_tiles.append(lam_t)
+            v_tiles.append(v_t)
+        lam_all = jnp.concatenate(lam_tiles)                  # (N_tot, k)
+        v_all = jnp.concatenate(v_tiles)                      # (N_tot, d, k)
+        v_flat = jnp.transpose(v_all, (1, 0, 2)).reshape(d, -1)
+
+        # Pass 2 — relevance rows, tile by tile, Gram-free.
+        rows = []
+        for s in range(0, n_total, block):
+            rows.append(_tile_rows(feats[s:s + block], nv[s:s + block],
+                                   lam_all[s:s + block], v_flat,
+                                   self.cfg.eig_floor, top_k, self.impl))
+        r = jnp.concatenate(rows)[:n_users, :n_users]
+        return r, sim.symmetrize(r)
+
+    def _run_shard_map(self, feats: jax.Array, nv: jax.Array
+                       ) -> tuple[jax.Array, jax.Array]:
+        axis = self.cfg.mesh_axis
+        mesh = self.mesh or make_user_mesh(axis)
+        n_users = feats.shape[0]
+        axis_size = mesh.shape[axis]
+        if n_users % axis_size:
+            raise ValueError(
+                f"n_users={n_users} not divisible by mesh axis {axis!r}"
+                f" of size {axis_size}")
+        top_k = self._top_k(feats.shape[-1])
+        body = partial(_sharded_protocol, axis=axis, top_k=top_k,
+                       eig_floor=self.cfg.eig_floor, impl=self.impl)
+        spec_in = P(axis)
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(spec_in, spec_in),
+                       out_specs=(P(), P()),       # replicated (r, R)
+                       check_rep=False)
+        with mesh:
+            feats = jax.device_put(feats, NamedSharding(mesh, P(axis)))
+            nv = jax.device_put(nv, NamedSharding(mesh, P(axis)))
+            return jax.jit(fn)(feats, nv)

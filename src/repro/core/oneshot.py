@@ -1,6 +1,6 @@
-"""One-shot clustering protocol (paper Algorithm 2), single-host.
+"""One-shot clustering protocol (paper Algorithm 2).
 
-Ties together ``repro.core.similarity`` (Eqs. 1-5) and
+Ties together the ``ProtocolEngine`` (Eqs. 1-5, any backend) and
 ``repro.core.clustering`` (HAC + cut) and tracks the communication ledger —
 the paper's headline claim is that the whole clustering costs each user one
 ``(k x d)`` eigenvector upload + one ``(N,)`` relevance upload, before any
@@ -12,11 +12,11 @@ import dataclasses
 from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import clustering as clu
 from repro.core import similarity as sim
+from repro.core.engine import ProtocolEngine
 
 __all__ = ["CommLedger", "OneShotResult", "one_shot_clustering"]
 
@@ -82,44 +82,25 @@ def one_shot_clustering(features: Sequence[np.ndarray] | jax.Array,
                         n_clusters: int,
                         cfg: sim.SimilarityConfig | None = None,
                         linkage: str = "average",
-                        model_params: int = 0) -> OneShotResult:
+                        model_params: int = 0,
+                        n_valid: jax.Array | None = None,
+                        mesh=None) -> OneShotResult:
     """Run paper Algorithm 2 end-to-end on per-user feature matrices.
 
     ``features``: list of ``(n_i, d)`` arrays (or a padded ``(N, n, d)``
-    array).  Returns labels, the similarity matrix, and the comm ledger.
+    array, with the true per-user counts in ``n_valid``).  The similarity
+    backend — dense / blockwise-streaming / shard_map — is chosen by
+    ``cfg``; ``mesh`` is only consulted by the shard_map backend.  Returns
+    labels, the similarity matrix, and the comm ledger.
     """
-    cfg = cfg or sim.SimilarityConfig()
-    if isinstance(features, (jax.Array, np.ndarray)):
-        n_users, _, d = features.shape
-        feats = features
-        n_valid = None
-    else:
-        n_users, d = len(features), features[0].shape[1]
-        feats = features
-        n_valid = None
-    top_k = cfg.top_k or d
+    engine = ProtocolEngine(cfg, mesh=mesh)
+    res = engine.run(features, n_valid)
 
-    # Directed relevance r and symmetrized R (Eqs. 1-5).
-    if isinstance(feats, (jax.Array, np.ndarray)):
-        grams = sim.batched_gram(jnp.asarray(feats), impl=cfg.impl)
-    else:
-        counts = [f.shape[0] for f in feats]
-        n_max = max(counts)
-        padded = np.zeros((n_users, n_max, d), dtype=np.float32)
-        for i, f in enumerate(feats):
-            padded[i, : f.shape[0]] = f
-        grams = sim.batched_gram(jnp.asarray(padded),
-                                 jnp.asarray(counts, dtype=jnp.float32),
-                                 impl=cfg.impl)
-    lam, v = jax.vmap(lambda g: sim.spectrum(g, top_k))(grams)
-    r = sim.relevance_matrix(grams, lam, v, cfg.eig_floor, impl=cfg.impl)
-    big_r = sim.symmetrize(r)
-
-    big_r_np = np.asarray(big_r)
+    big_r_np = np.asarray(res.similarity)
     dend = clu.hac(big_r_np, linkage=linkage)
     labels = clu.cut(dend, n_clusters)
-    ledger = CommLedger(n_users=n_users, d=d, top_k=top_k,
+    ledger = CommLedger(n_users=res.n_users, d=res.d, top_k=res.top_k,
                         model_params=model_params)
     return OneShotResult(labels=labels, similarity=big_r_np,
-                         relevance=np.asarray(r), dendrogram=dend,
+                         relevance=np.asarray(res.relevance), dendrogram=dend,
                          ledger=ledger)

@@ -26,6 +26,7 @@ import numpy as np
 
 __all__ = [
     "SimilarityConfig",
+    "pad_ragged",
     "gram",
     "spectrum",
     "user_signature",
@@ -50,12 +51,43 @@ class SimilarityConfig:
         we default to 8 for margin).  ``0`` means "all d".
       eig_floor: eigenvalues below this are clamped before the min/max ratio
         (paper §III: tiny eigenvalues drift the geometric mean).
-      impl: "jnp" reference path or "pallas" TPU kernels.
+      impl: kernel implementation inside the protocol, "jnp" reference maths
+        or "pallas" TPU kernels.
+      backend: which ``ProtocolEngine`` backend runs the protocol —
+        "jnp" (single host), "pallas" (single host, forces ``impl="pallas"``)
+        or "shard_map" (users sharded over a mesh axis, paper star topology
+        mapped onto collectives).
+      block_users: ``0`` runs the dense path (full ``(N, d, d)`` Gram stack
+        in one jit).  ``> 0`` enables blockwise streaming: users are
+        processed in tiles of this size, Grams live only per tile, and
+        cross-projection is Gram-free — peak memory O(block_users * d^2).
+        Single-host backends only.
+      mesh_axis: mesh axis users are sharded over (shard_map backend).
     """
 
     top_k: int = 8
     eig_floor: float = 1e-6
     impl: str = "jnp"
+    backend: str = "jnp"
+    block_users: int = 0
+    mesh_axis: str = "data"
+
+
+def pad_ragged(features: Sequence[np.ndarray]
+               ) -> tuple[jax.Array, jax.Array]:
+    """Zero-pad a ragged list of per-user ``(n_i, d)`` feature matrices.
+
+    Returns ``(padded (N, n_max, d) float32, n_valid (N,) float32)`` — the
+    single conversion point used by ``similarity_matrix``,
+    ``one_shot_clustering`` and the ``ProtocolEngine``.
+    """
+    counts = [f.shape[0] for f in features]
+    n_max = max(counts)
+    d = features[0].shape[1]
+    padded = np.zeros((len(features), n_max, d), dtype=np.float32)
+    for i, f in enumerate(features):
+        padded[i, : f.shape[0]] = f
+    return jnp.asarray(padded), jnp.asarray(counts, dtype=jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -228,18 +260,8 @@ def symmetrize(r: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# End-to-end (single host)
+# End-to-end (any backend)
 # ---------------------------------------------------------------------------
-
-@partial(jax.jit, static_argnames=("top_k", "impl"))
-def _similarity_matrix_jit(features: jax.Array, n_valid: jax.Array,
-                           top_k: int, eig_floor: float, impl: str
-                           ) -> jax.Array:
-    grams = batched_gram(features, n_valid, impl=impl)
-    lam, v = jax.vmap(lambda g: spectrum(g, top_k))(grams)
-    r = relevance_matrix(grams, lam, v, eig_floor, impl=impl)
-    return symmetrize(r)
-
 
 def similarity_matrix(features: jax.Array | Sequence[np.ndarray],
                       cfg: SimilarityConfig | None = None,
@@ -248,19 +270,9 @@ def similarity_matrix(features: jax.Array | Sequence[np.ndarray],
 
     Accepts a list of per-user ``(n_i, d)`` arrays (ragged); they are
     zero-padded to the max ``n_i`` and the true counts are passed through.
+    Thin wrapper over ``repro.core.engine.ProtocolEngine`` — the backend
+    (dense / blockwise / shard_map) is chosen by ``cfg``.
     """
-    cfg = cfg or SimilarityConfig()
-    if not isinstance(features, (jax.Array, np.ndarray)):
-        counts = [f.shape[0] for f in features]
-        n_max = max(counts)
-        d = features[0].shape[1]
-        padded = np.zeros((len(features), n_max, d), dtype=np.float32)
-        for i, f in enumerate(features):
-            padded[i, : f.shape[0]] = f
-        features = jnp.asarray(padded)
-        n_valid = jnp.asarray(counts, dtype=jnp.float32)
-    if n_valid is None:
-        n_valid = jnp.full((features.shape[0],), features.shape[1],
-                           dtype=jnp.float32)
-    return _similarity_matrix_jit(features, n_valid, cfg.top_k,
-                                  cfg.eig_floor, cfg.impl)
+    from repro.core.engine import ProtocolEngine
+
+    return ProtocolEngine(cfg).similarity(features, n_valid=n_valid)

@@ -2,12 +2,15 @@
 
 ``local_update`` runs ``steps`` optimizer steps over pre-batched data with
 ``jax.lax.scan`` so one client round is a single jit-compiled call.
+``fused_lps_round`` vmaps that scan over a stacked client axis and folds
+the FedAvg aggregation in, so one jit call performs a cluster's ENTIRE
+local round — the vectorized hot path of the MT-HFL trainer.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +20,8 @@ from repro import optim
 PyTree = Any
 LossFn = Callable[[PyTree, dict], jax.Array]
 
-__all__ = ["ClientConfig", "local_update", "make_batches"]
+__all__ = ["ClientConfig", "local_update", "fused_lps_round",
+           "make_batches", "make_batch_stack"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,9 +42,10 @@ def _make_opt(cfg: ClientConfig) -> optim.Optimizer:
     raise ValueError(f"unknown optimizer {cfg.optimizer!r}")
 
 
-@partial(jax.jit, static_argnames=("loss_fn", "optimizer", "clip_norm"))
-def _run(params: PyTree, batches: dict, loss_fn: LossFn,
-         optimizer: optim.Optimizer, clip_norm: float) -> tuple[PyTree, jax.Array]:
+def _scan_steps(params: PyTree, batches: dict, loss_fn: LossFn,
+                optimizer: optim.Optimizer, clip_norm: float
+                ) -> tuple[PyTree, jax.Array]:
+    """``steps`` optimizer steps via lax.scan (one client, traceable)."""
     opt_state = optimizer.init(params)
 
     def step(carry, batch):
@@ -56,6 +61,25 @@ def _run(params: PyTree, batches: dict, loss_fn: LossFn,
     return params, losses
 
 
+_run = jax.jit(_scan_steps,
+               static_argnames=("loss_fn", "optimizer", "clip_norm"))
+
+
+@partial(jax.jit, static_argnames=("loss_fn", "optimizer", "clip_norm"))
+def _run_lps(params: PyTree, batches: dict, weights: jax.Array,
+             loss_fn: LossFn, optimizer: optim.Optimizer,
+             clip_norm: float) -> tuple[PyTree, jax.Array]:
+    new_params, losses = jax.vmap(
+        lambda b: _scan_steps(params, b, loss_fn, optimizer, clip_norm)
+    )(batches)
+    w = weights.astype(jnp.float32)
+    w = w / jnp.sum(w)
+    avg = jax.tree.map(
+        lambda x: jnp.tensordot(w, x.astype(jnp.float32),
+                                axes=1).astype(x.dtype), new_params)
+    return avg, losses
+
+
 def local_update(params: PyTree, batches: dict, loss_fn: LossFn,
                  cfg: ClientConfig) -> tuple[PyTree, jax.Array]:
     """Run one client's local round.
@@ -66,6 +90,20 @@ def local_update(params: PyTree, batches: dict, loss_fn: LossFn,
     return _run(params, batches, loss_fn, _make_opt(cfg), cfg.clip_norm)
 
 
+def fused_lps_round(params: PyTree, batches: dict, weights: jax.Array,
+                    loss_fn: LossFn, cfg: ClientConfig
+                    ) -> tuple[PyTree, jax.Array]:
+    """One LPS round — every client's local scan AND the FedAvg — in one jit.
+
+    ``batches``: pytree with leading ``(clients, steps, batch, ...)`` axes
+    (from ``make_batch_stack``); every client starts from the same
+    ``params`` (the LPS broadcast) and the sample-count-``weights``ed
+    average comes back, plus per-client per-step ``losses``.
+    """
+    return _run_lps(params, batches, jnp.asarray(weights), loss_fn,
+                    _make_opt(cfg), cfg.clip_norm)
+
+
 def make_batches(x, y, batch_size: int, steps: int, rng) -> dict:
     """Stack ``steps`` random mini-batches from (x, y) -> scan-ready pytree."""
     import numpy as np
@@ -73,3 +111,21 @@ def make_batches(x, y, batch_size: int, steps: int, rng) -> dict:
     n = len(y)
     idx = rng.integers(0, n, size=(steps, min(batch_size, n)))
     return {"x": jnp.asarray(x[idx]), "y": jnp.asarray(y[idx])}
+
+
+def make_batch_stack(datasets: Sequence[tuple], batch_size: int,
+                     steps: int, rng) -> dict:
+    """Batches for a whole cluster -> ``(clients, steps, batch)`` pytree.
+
+    ``datasets``: per-client ``(x, y)`` pairs.  Sampling is uniform WITH
+    replacement so every client yields the same batch shape even when some
+    hold fewer than ``batch_size`` samples (ragged clusters stay stackable).
+    """
+    import numpy as np
+
+    xs, ys = [], []
+    for x, y in datasets:
+        idx = rng.integers(0, len(y), size=(steps, batch_size))
+        xs.append(x[idx])
+        ys.append(y[idx])
+    return {"x": jnp.asarray(np.stack(xs)), "y": jnp.asarray(np.stack(ys))}

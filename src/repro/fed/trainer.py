@@ -13,6 +13,12 @@ algorithm, the random baseline, or the oracle), run:
 The model is pluggable via a ``TaskModel`` bundle (init/loss/accuracy +
 common-layer predicate), so the same trainer drives the paper's CNN/MLP and
 the transformer zoo.
+
+The per-cluster inner loop is fully vectorized: one
+``fed_client.fused_lps_round`` call (vmap over stacked clients, lax.scan
+over local steps, FedAvg folded in) performs a whole LPS round per jit
+dispatch — see ``benchmarks/bench_kernels.py`` for the speedup vs the
+per-client Python loop.
 """
 from __future__ import annotations
 
@@ -120,25 +126,31 @@ def train_mthfl(users: Sequence,                      # list[UserData-like]
                                  if l == t)) or 1.0
                        for t in range(n_clusters)]
 
+    # Per-cluster member datasets, gathered once: the hot loop below feeds
+    # them to ``fused_lps_round`` — every client's lax.scan vmapped over a
+    # stacked client axis plus the FedAvg, one jit call per LPS round
+    # (instead of the seed's per-client Python loop).
+    cluster_data = []
+    for t in range(n_clusters):
+        members = [u for u, l in zip(users, labels) if l == t]
+        cluster_data.append((
+            [(u.x, user_y[u.user_id]) for u in members],
+            jnp.asarray([u.n for u in members], jnp.float32)
+            if members else None))
+
     for g in range(cfg.global_rounds):
         for t in range(n_clusters):
-            members = [u for u, l in zip(users, labels) if l == t]
-            if not members:
+            datasets, ns = cluster_data[t]
+            if not datasets:
                 continue
             p = lps_params[t]
             round_losses = []
             for _ in range(cfg.local_rounds):
-                client_params, ns = [], []
-                for u in members:
-                    batches = fed_client.make_batches(
-                        u.x, user_y[u.user_id], cfg.batch_size,
-                        cfg.local_steps, rng)
-                    new_p, losses = fed_client.local_update(
-                        p, batches, models[t].loss_fn, cfg.client)
-                    client_params.append(new_p)
-                    ns.append(u.n)
-                    round_losses.append(float(jnp.mean(losses)))
-                p = hier.lps_round(client_params, ns)
+                batches = fed_client.make_batch_stack(
+                    datasets, cfg.batch_size, cfg.local_steps, rng)
+                p, losses = fed_client.fused_lps_round(
+                    p, batches, ns, models[t].loss_fn, cfg.client)
+                round_losses.append(float(jnp.mean(losses)))
             lps_params[t] = p
             loss_hist[g, t] = float(np.mean(round_losses)) if round_losses else 0.0
         # GPS round: average common layers, broadcast.

@@ -1,0 +1,2 @@
+from repro.kernels.gram_project.ops import gram_project
+from repro.kernels.gram_project.ref import gram_project_ref

@@ -1,0 +1,21 @@
+"""jnp oracle for the fused Gram-projection kernel.
+
+``||G v_k||`` with ``G = (1/n) X^T X``, computed WITHOUT forming ``G``:
+``G v = (1/n) X^T (X v)`` — two skinny matmuls instead of a ``(d, d)``
+intermediate.  This identity is what both the blockwise protocol backend
+and the Pallas kernel exploit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gram_project_ref(x: jax.Array, v: jax.Array,
+                     n_valid: jax.Array | int | None = None) -> jax.Array:
+    """``x (n, d)``, ``v (d, k)`` -> ``|| (x^T x / n) v_k ||_2`` per column."""
+    n = x.shape[0] if n_valid is None else n_valid
+    n = jnp.maximum(jnp.asarray(n, jnp.float32), 1.0)
+    p = x @ v                                   # (n, k)
+    q = x.T @ p                                 # (d, k)
+    return jnp.sqrt(jnp.sum(q * q, axis=0)) / n

@@ -1,0 +1,62 @@
+"""Deterministic fallback for ``hypothesis`` (absent in this container).
+
+When hypothesis is installed the real ``given``/``settings``/``strategies``
+are re-exported unchanged.  Otherwise ``@given(**kwargs)`` expands each
+strategy into a small fixed sample grid and parametrizes the test over (at
+most) ``_MAX_CASES`` combinations — property tests degrade to deterministic
+example tests instead of erroring at collection time.
+"""
+from __future__ import annotations
+
+import itertools
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import pytest
+
+    _MAX_CASES = 8
+
+    class _Strategy:
+        def __init__(self, samples):
+            self.samples = list(samples)
+
+    class _Strategies:
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            lo, hi = float(min_value), float(max_value)
+            mid = (lo + hi) / 2.0
+            return _Strategy([lo, hi, mid, lo + (hi - lo) * 0.123,
+                              lo + (hi - lo) * 0.789])
+
+        @staticmethod
+        def integers(min_value, max_value, **_kw):
+            lo, hi = int(min_value), int(max_value)
+            span = hi - lo
+            picks = {lo, hi, lo + span // 2, lo + span // 3,
+                     lo + (2 * span) // 3}
+            return _Strategy(sorted(picks))
+
+    st = _Strategies()
+
+    def settings(**_kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(**strategies):
+        names = sorted(strategies)
+        combos = list(itertools.islice(
+            itertools.product(*(strategies[n].samples for n in names)),
+            _MAX_CASES))
+        if len(names) == 1:
+            combos = [c[0] for c in combos]
+
+        def deco(fn):
+            return pytest.mark.parametrize(
+                ",".join(names), combos,
+                ids=[f"case{i}" for i in range(len(combos))])(fn)
+        return deco

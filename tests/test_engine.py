@@ -1,0 +1,197 @@
+"""Backend parity for the ProtocolEngine (the ISSUE's acceptance tests).
+
+Single-host dense vs Pallas vs blockwise-streaming vs shard_map must all
+produce the same R matrix (1e-5) and identical HAC labels on a seeded
+synthetic task mixture; shard_map is additionally exercised at 4 forced
+host devices in a subprocess (jax locks the device count on first init).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import clustering as clu
+from repro.core import oneshot
+from repro.core import similarity as sim
+from repro.core.engine import ProtocolEngine
+from repro.data import synthetic as syn
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+@pytest.fixture(scope="module")
+def mixture():
+    feats, task_ids = syn.make_task_feature_mixture(
+        n_users=24, n_samples=48, d=16, n_tasks=3, seed=7)
+    return jnp.asarray(feats), task_ids
+
+
+@pytest.fixture(scope="module")
+def dense_r(mixture):
+    feats, _ = mixture
+    return np.asarray(ProtocolEngine(
+        sim.SimilarityConfig(top_k=6)).similarity(feats))
+
+
+class TestBackendParity:
+    @pytest.mark.parametrize("block", [5, 8, 24, 64])
+    def test_blockwise_matches_dense(self, mixture, dense_r, block):
+        feats, task_ids = mixture
+        cfg = sim.SimilarityConfig(top_k=6, block_users=block)
+        r_blk = np.asarray(ProtocolEngine(cfg).similarity(feats))
+        np.testing.assert_allclose(r_blk, dense_r, atol=1e-5)
+        assert (clu.hac_clusters(r_blk, 3) ==
+                clu.hac_clusters(dense_r, 3)).all()
+
+    def test_pallas_backend_matches_dense(self, mixture, dense_r):
+        feats, _ = mixture
+        cfg = sim.SimilarityConfig(top_k=6, backend="pallas")
+        r_p = np.asarray(ProtocolEngine(cfg).similarity(feats))
+        np.testing.assert_allclose(r_p, dense_r, atol=1e-5)
+
+    def test_pallas_blockwise_matches_dense(self, mixture, dense_r):
+        feats, _ = mixture
+        cfg = sim.SimilarityConfig(top_k=6, backend="pallas", block_users=7)
+        r_pb = np.asarray(ProtocolEngine(cfg).similarity(feats))
+        np.testing.assert_allclose(r_pb, dense_r, atol=1e-5)
+
+    def test_shard_map_matches_dense_1dev(self, mixture, dense_r):
+        feats, _ = mixture
+        cfg = sim.SimilarityConfig(top_k=6, backend="shard_map")
+        r_s = np.asarray(ProtocolEngine(cfg).similarity(feats))
+        np.testing.assert_allclose(r_s, dense_r, atol=1e-5)
+
+    def test_blockwise_ragged_matches_dense_ragged(self):
+        rng = np.random.default_rng(3)
+        ragged = [rng.standard_normal((n, 12)).astype(np.float32)
+                  for n in (50, 21, 64, 33, 40)]
+        cfg = sim.SimilarityConfig(top_k=4)
+        r_dense = np.asarray(ProtocolEngine(cfg).similarity(ragged))
+        r_blk = np.asarray(ProtocolEngine(
+            dataclasses.replace(cfg, block_users=2)).similarity(ragged))
+        np.testing.assert_allclose(r_blk, r_dense, atol=1e-5)
+
+    def test_top_k_larger_than_d(self):
+        """top_k > d must clamp to d on every backend (a Gram only has d
+        eigenpairs) — regression: blockwise used the raw top_k to reshape."""
+        rng = np.random.default_rng(9)
+        feats = jnp.asarray(rng.standard_normal((6, 32, 4)), jnp.float32)
+        cfg = sim.SimilarityConfig(top_k=8)        # d = 4
+        r_dense = np.asarray(ProtocolEngine(cfg).similarity(feats))
+        r_blk = np.asarray(ProtocolEngine(
+            dataclasses.replace(cfg, block_users=3)).similarity(feats))
+        np.testing.assert_allclose(r_blk, r_dense, atol=1e-5)
+        res = ProtocolEngine(cfg).run(feats)
+        assert res.top_k == 4
+
+    def test_recovers_tasks_at_odd_block(self, mixture):
+        feats, task_ids = mixture
+        cfg = sim.SimilarityConfig(top_k=6, block_users=7)  # 24 % 7 != 0
+        res = oneshot.one_shot_clustering(feats, n_clusters=3, cfg=cfg)
+        assert clu.clustering_accuracy(res.labels, task_ids) == 1.0
+
+
+class TestEngineApi:
+    def test_unknown_backend_rejected(self):
+        with pytest.raises(ValueError, match="backend"):
+            ProtocolEngine(sim.SimilarityConfig(backend="cuda"))
+
+    def test_blockwise_shard_map_rejected(self):
+        with pytest.raises(ValueError, match="single-host"):
+            ProtocolEngine(sim.SimilarityConfig(backend="shard_map",
+                                                block_users=8))
+
+    def test_signatures_rejects_non_dense_configs(self, mixture):
+        feats, _ = mixture
+        for cfg in (sim.SimilarityConfig(block_users=8),
+                    sim.SimilarityConfig(backend="shard_map")):
+            with pytest.raises(ValueError, match="dense"):
+                ProtocolEngine(cfg).signatures(feats)
+
+    def test_ragged_with_n_valid_rejected(self, mixture):
+        eng = ProtocolEngine()
+        with pytest.raises(ValueError, match="ragged"):
+            eng.prepare([np.zeros((4, 3), np.float32)],
+                        n_valid=jnp.ones((1,)))
+
+    def test_run_reports_dims(self, mixture):
+        feats, _ = mixture
+        res = ProtocolEngine(sim.SimilarityConfig(top_k=6)).run(feats)
+        assert (res.n_users, res.d, res.top_k) == (24, 16, 6)
+        assert res.similarity.shape == (24, 24)
+        np.testing.assert_allclose(np.asarray(res.similarity),
+                                   np.asarray(sim.symmetrize(res.relevance)),
+                                   atol=1e-6)
+
+    def test_oneshot_respects_n_valid(self):
+        """Padded-array input must honour true counts (seed dropped them)."""
+        rng = np.random.default_rng(5)
+        ragged = [rng.standard_normal((n, 8)).astype(np.float32)
+                  for n in (30, 17, 25)]
+        res_list = oneshot.one_shot_clustering(
+            ragged, 2, cfg=sim.SimilarityConfig(top_k=4))
+        padded, nv = sim.pad_ragged(ragged)
+        res_pad = oneshot.one_shot_clustering(
+            padded, 2, cfg=sim.SimilarityConfig(top_k=4), n_valid=nv)
+        np.testing.assert_allclose(res_pad.similarity, res_list.similarity,
+                                   atol=1e-6)
+
+    def test_similarity_matrix_routes_through_engine(self, mixture,
+                                                     dense_r):
+        feats, _ = mixture
+        r = np.asarray(sim.similarity_matrix(
+            feats, sim.SimilarityConfig(top_k=6, block_users=9)))
+        np.testing.assert_allclose(r, dense_r, atol=1e-5)
+
+
+SHARD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import clustering as clu
+    from repro.core import similarity as sim
+    from repro.core.engine import ProtocolEngine
+    from repro.data import synthetic as syn
+
+    feats, task_ids = syn.make_task_feature_mixture(
+        n_users=24, n_samples=48, d=16, n_tasks=3, seed=7)
+    feats = jnp.asarray(feats)
+    cfg = sim.SimilarityConfig(top_k=6)
+    r_ref = np.asarray(ProtocolEngine(cfg).similarity(feats))
+    r_blk = np.asarray(ProtocolEngine(
+        sim.SimilarityConfig(top_k=6, block_users=5)).similarity(feats))
+    r_dist = np.asarray(ProtocolEngine(
+        sim.SimilarityConfig(top_k=6, backend="shard_map")).similarity(feats))
+    assert len(jax.devices()) == 4
+    for name, r in (("shard_map", r_dist), ("blockwise", r_blk)):
+        err = float(np.abs(r - r_ref).max())
+        assert err < 1e-5, (name, err)
+        assert (clu.hac_clusters(r, 3) == clu.hac_clusters(r_ref, 3)).all(), name
+    print("ENGINE_PARITY_OK")
+""")
+
+
+def test_three_way_parity_4dev():
+    """Dense vs blockwise vs shard_map(4 devices): same R, same labels."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", SHARD_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "ENGINE_PARITY_OK" in res.stdout
+
+
+class TestRandomClustersGuard:
+    def test_too_many_clusters_raises(self):
+        with pytest.raises(ValueError, match="n_clusters"):
+            clu.random_clusters(3, 5, rng=0)
+
+    def test_valid_edge_ok(self):
+        labels = clu.random_clusters(3, 3, rng=0)
+        assert len(np.unique(labels)) == 3

@@ -11,6 +11,8 @@ from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention.ref import flash_ref
 from repro.kernels.gram import ops as gram_ops
 from repro.kernels.gram.ref import gram_ref
+from repro.kernels.gram_project import ops as gp_ops
+from repro.kernels.gram_project.ref import gram_project_ref
 
 
 class TestGramKernel:
@@ -52,6 +54,55 @@ class TestEigprojectKernel:
         g = jnp.eye(128, dtype=jnp.float32)
         v = jnp.zeros((128, 8), jnp.float32)
         out = proj_ops.project_norms(g, v, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+
+
+class TestGramProjectKernel:
+    """Fused Gram + cross-projection: ||(X^T X / n) v_k|| without the
+    (d, d) Gram — the blockwise engine's Eq.-2 hot path."""
+
+    @pytest.mark.parametrize("n,d,k", [(128, 128, 128), (256, 128, 8),
+                                       (100, 96, 5), (64, 40, 12),
+                                       (130, 200, 48)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_allclose_sweep(self, n, d, k, dtype):
+        rng = np.random.default_rng(n * 5 + d + k)
+        x = jnp.asarray(rng.standard_normal((n, d)), dtype)
+        v = jnp.asarray(rng.standard_normal((d, k)), dtype)
+        out = gp_ops.gram_project(x, v, interpret=True)
+        ref = gram_project_ref(x.astype(jnp.float32),
+                               v.astype(jnp.float32))
+        tol = 1e-3 if dtype == jnp.float32 else 6e-2
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=tol, atol=tol * 10)
+
+    def test_matches_two_stage_gram_path(self):
+        """Fused == gram() then project_norms() on the explicit Gram."""
+        rng = np.random.default_rng(11)
+        x = jnp.asarray(rng.standard_normal((96, 64)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((64, 8)), jnp.float32)
+        g = gram_ops.gram_matrix(x, interpret=True) / x.shape[0]
+        two_stage = proj_ops.project_norms(g, v, interpret=True)
+        fused = gp_ops.gram_project(x, v, interpret=True)
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(two_stage),
+                                   rtol=1e-3, atol=1e-4)
+
+    def test_ragged_n_valid(self):
+        rng = np.random.default_rng(2)
+        x = rng.standard_normal((40, 32)).astype(np.float32)
+        padded = np.zeros((64, 32), np.float32)
+        padded[:40] = x
+        v = jnp.asarray(rng.standard_normal((32, 4)), jnp.float32)
+        out_pad = gp_ops.gram_project(jnp.asarray(padded), v, n_valid=40,
+                                      interpret=True)
+        out_true = gp_ops.gram_project(jnp.asarray(x), v, interpret=True)
+        np.testing.assert_allclose(np.asarray(out_pad), np.asarray(out_true),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_zero_vector_column(self):
+        x = jnp.asarray(np.eye(64, 32), jnp.float32)
+        v = jnp.zeros((32, 8), jnp.float32)
+        out = gp_ops.gram_project(x, v, interpret=True)
         np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
 
 
