@@ -8,7 +8,10 @@ validation status + arithmetic intensity), plus two engine-level rows:
 * ``engine_blockwise_*``: the streaming ``ProtocolEngine`` computing R for
   thousands of users on CPU with peak Gram memory O(block_users * d^2).
 * ``lps_round_*``: the vectorized (vmap + scan, one jit) LPS round vs the
-  seed's per-client Python loop — the MT-HFL trainer hot path.
+  seed's per-client Python loop — one cluster's worth of the MT-HFL hot
+  path.  The WHOLE-trainer version of this comparison (cluster-stacked
+  fused program vs the per-cluster loop, jnp and shard_map backends) lives
+  in ``benchmarks/bench_trainer.py``.
 
 Runs standalone too:  ``PYTHONPATH=src:. python benchmarks/bench_kernels.py
 --quick`` (CI smoke: shrunken shapes, same code paths).

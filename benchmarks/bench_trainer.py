@@ -1,0 +1,161 @@
+"""Fused MT-HFL trainer benchmark: rounds/sec vs the per-cluster loop.
+
+Grid: T in {2, 4, 8} clusters x C in {8, 32} clients per cluster (MLP
+clients, synthetic data).  Three execution paths of ``train_mthfl``:
+
+  loop        — the retained reference loop (``fused=False``): Python over
+                clusters, one ``fused_lps_round`` dispatch per cluster per
+                local round, host-side batch gathering.
+  fused       — the cluster-stacked program (vmap clusters + scan local
+                rounds + in-jit GPS): ONE dispatch per global round.
+  fused_shmap — same program under shard_map (cluster axis over devices;
+                1 device on a CPU runner, so this measures overhead).
+
+Methodology: every path warms the jit caches with one ``train_mthfl``
+call, then runs at G=1 and at G=1+``--rounds``; per-round time is the
+difference divided by ``--rounds``, which subtracts per-call setup (stack
+building, eval) identically from all paths.  Both paths
+train on bit-identical batches (keyed sampling), so a parity flag rides
+along with every row.
+
+Acceptance (ISSUE 2): fused >= 3x loop rounds/sec at T=8, C=32 on CPU,
+recorded in the JSON written to ``--json``.
+
+Standalone: ``PYTHONPATH=src:. python benchmarks/bench_trainer.py --quick``
+(CI smoke: T=2, C=8 only, same code paths).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.data.partition import UserData
+from repro.fed import client as fclient
+from repro.fed import partition as fpart
+from repro.fed import trainer as ftrainer
+from repro.models import mlp
+
+M, NCLS, N_PER_CLIENT = 32, 4, 128
+MCFG = mlp.PaperMLPConfig(m=M, hidden=16, n_classes=NCLS)
+
+
+def make_setup(n_clusters: int, n_clients: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((NCLS, M)).astype(np.float32)
+    users, labels = [], []
+    uid = 0
+    for t in range(n_clusters):
+        for _ in range(n_clients):
+            y = rng.integers(0, NCLS, N_PER_CLIENT).astype(np.int32)
+            x = (centers[y] + 0.3 * rng.standard_normal(
+                (N_PER_CLIENT, M))).astype(np.float32)
+            users.append(UserData(user_id=uid, task_id=t, x=x, y=y,
+                                  task_classes=tuple(range(NCLS))))
+            labels.append(t)
+            uid += 1
+    models = [ftrainer.TaskModel(
+        init=lambda k, c=MCFG: mlp.init(c, k),
+        loss_fn=mlp.loss_fn(MCFG),
+        accuracy=lambda p, x, y, c=MCFG: mlp.accuracy(c, p, x, y),
+        is_common=fpart.prefix_predicate(mlp.COMMON_PREFIXES))
+        for _ in range(n_clusters)]
+    evals = []
+    for _ in range(n_clusters):
+        y = rng.integers(0, NCLS, 32).astype(np.int32)
+        x = (centers[y] + 0.3 * rng.standard_normal((32, M))).astype(
+            np.float32)
+        evals.append((jnp.asarray(x), y))
+    cc = [list(range(NCLS))] * n_clusters
+    return users, np.asarray(labels), models, evals, cc
+
+
+def _time_rounds(setup, n_rounds: int, **train_kw) -> tuple[float, object]:
+    """Seconds per global round (compile subtracted) + the G=1 history."""
+    users, labels, models, evals, cc = setup
+
+    def run(g):
+        cfg = ftrainer.MTHFLConfig(
+            global_rounds=g, local_rounds=1, local_steps=10, batch_size=32,
+            client=fclient.ClientConfig(lr=0.05), seed=0,
+            **train_kw.get("cfg_kw", {}))
+        t0 = time.perf_counter()
+        hist = ftrainer.train_mthfl(users, labels, models, evals, cfg,
+                                    cluster_classes=cc,
+                                    fused=train_kw["fused"])
+        return time.perf_counter() - t0, hist
+
+    run(1)                          # warmup: compiles land in the jit cache
+    t1, hist1 = run(1)
+    t2, _ = run(1 + n_rounds)
+    return max((t2 - t1) / n_rounds, 1e-9), hist1
+
+
+def bench_grid(n_clusters: int, n_clients: int, n_rounds: int
+               ) -> tuple[list[str], dict]:
+    setup = make_setup(n_clusters, n_clients)
+    s_loop, h_loop = _time_rounds(setup, n_rounds, fused=False)
+    s_fused, h_fused = _time_rounds(setup, n_rounds, fused=True)
+    s_shmap, h_shmap = _time_rounds(
+        setup, n_rounds, fused=True, cfg_kw={"backend": "shard_map"})
+
+    def close(a, b):
+        return bool(np.allclose(a.accuracy, b.accuracy, atol=1e-5)
+                    and np.allclose(a.train_loss, b.train_loss, atol=1e-5))
+
+    rec = {
+        "T": n_clusters, "C": n_clients,
+        "loop_rounds_per_sec": round(1.0 / s_loop, 2),
+        "fused_rounds_per_sec": round(1.0 / s_fused, 2),
+        "fused_shard_map_rounds_per_sec": round(1.0 / s_shmap, 2),
+        "speedup_fused_vs_loop": round(s_loop / s_fused, 2),
+        "speedup_shard_map_vs_loop": round(s_loop / s_shmap, 2),
+        "fused_matches_loop": close(h_fused, h_loop),
+        "shard_map_matches_loop": close(h_shmap, h_loop),
+        "n_devices": len(jax.devices()),
+    }
+    rows = [common.row(
+        f"trainer_T{n_clusters}_C{n_clients}", s_fused * 1e6,
+        loop_us=round(s_loop * 1e6, 1),
+        shard_map_us=round(s_shmap * 1e6, 1),
+        speedup_vs_loop=rec["speedup_fused_vs_loop"],
+        matches_loop=rec["fused_matches_loop"])]
+    return rows, rec
+
+
+def run(quick: bool = False, n_rounds: int = 4,
+        json_path: str | None = None) -> list[str]:
+    grid = [(2, 8)] if quick else [(2, 8), (2, 32), (4, 8), (4, 32),
+                                   (8, 8), (8, 32)]
+    rows, records = [], []
+    for n_clusters, n_clients in grid:
+        r, rec = bench_grid(n_clusters, n_clients, n_rounds)
+        rows.extend(r)
+        records.append(rec)
+        jax.clear_caches()
+    if json_path:
+        Path(json_path).parent.mkdir(parents=True, exist_ok=True)
+        Path(json_path).write_text(json.dumps(
+            {"quick": quick, "rounds": n_rounds, "grid": records},
+            indent=2) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: T=2, C=8 only, same code paths")
+    ap.add_argument("--rounds", type=int, default=4,
+                    help="timed global rounds per path")
+    ap.add_argument("--json", default="benchmarks/results/bench_trainer.json",
+                    help="where to record the speedup grid")
+    args = ap.parse_args()
+    for r in run(quick=args.quick, n_rounds=args.rounds,
+                 json_path=args.json):
+        print(r, flush=True)

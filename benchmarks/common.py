@@ -2,6 +2,7 @@
 the Fig. 2 / Fig. 3 reproductions."""
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Callable, Sequence
 
@@ -36,11 +37,15 @@ def mthfl_compare(users, tasks: dict, model_builder: Callable,
                   eval_spec, n_clusters: int, seeds: Sequence[int],
                   cfg: ftrainer.MTHFLConfig,
                   feature_fn: Callable | None = None,
-                  top_k: int = 8):
+                  top_k: int = 8,
+                  fused: bool | str = "auto"):
     """Run proposed (one-shot similarity) vs random clustering over seeds.
 
     Returns dict with per-method mean/std of final per-cluster accuracy,
-    plus the clustering accuracy of the proposed method.
+    plus the clustering accuracy of the proposed method.  ``fused`` and
+    ``cfg.backend``/``cfg.scan_rounds`` select the trainer execution path
+    (the paper layouts have per-task head sizes, so ``"auto"`` falls back
+    to the reference loop unless the heads happen to match).
     """
     feats = [feature_fn(u.x) if feature_fn else u.x for u in users]
     res = oneshot.one_shot_clustering(feats, n_clusters,
@@ -60,12 +65,9 @@ def mthfl_compare(users, tasks: dict, model_builder: Callable,
                       else list(list(tasks.values())[t]))
         models = [model_builder(c) for c in cc]
         evals = [eval_spec(c, tasks) for c in cc]
-        run_cfg = ftrainer.MTHFLConfig(
-            global_rounds=cfg.global_rounds, local_rounds=cfg.local_rounds,
-            local_steps=cfg.local_steps, batch_size=cfg.batch_size,
-            client=cfg.client, seed=seed)
+        run_cfg = dataclasses.replace(cfg, seed=seed)
         hist = ftrainer.train_mthfl(users, labels, models, evals, run_cfg,
-                                    cluster_classes=cc)
+                                    cluster_classes=cc, fused=fused)
         return hist.accuracy[-1]
 
     proposed, random_base = [], []

@@ -8,6 +8,12 @@ experiment as a single runnable script.
     PYTHONPATH=src python examples/mthfl_train.py --dataset fmnist \
         --rounds 8 --seeds 3
     PYTHONPATH=src python examples/mthfl_train.py --dataset cifar --rounds 4
+
+``--fused`` / ``--backend`` select the trainer execution (see
+``repro.fed.trainer``): the paper layouts have per-task head sizes, so
+``--fused auto`` (default) runs the reference loop; ``--fused on`` forces
+the cluster-stacked fused program and therefore requires homogeneous
+heads (it raises otherwise, by design).
 """
 import argparse
 import sys
@@ -32,7 +38,16 @@ def main():
     ap.add_argument("--rounds", type=int, default=6)
     ap.add_argument("--seeds", type=int, default=3)
     ap.add_argument("--local-steps", type=int, default=10)
+    ap.add_argument("--fused", choices=["auto", "on", "off"],
+                    default="auto",
+                    help="trainer path: cluster-stacked fused program "
+                         "(on/auto) or the reference loop (off)")
+    ap.add_argument("--backend", choices=ftrainer.TRAINER_BACKENDS,
+                    default="jnp",
+                    help="fused execution backend (shard_map shards the "
+                         "cluster axis over local devices)")
     args = ap.parse_args()
+    fused = {"auto": "auto", "on": True, "off": False}[args.fused]
 
     if args.dataset == "fmnist":
         users = dpart.paper_fmnist_three_task(seed=0, scale=0.25)
@@ -60,10 +75,12 @@ def main():
     cfg = ftrainer.MTHFLConfig(
         global_rounds=args.rounds, local_rounds=1,
         local_steps=args.local_steps, batch_size=32,
-        client=fclient.ClientConfig(lr=0.05, optimizer="momentum"))
+        client=fclient.ClientConfig(lr=0.05, optimizer="momentum"),
+        backend=args.backend)
     out = common.mthfl_compare(users, tasks, builder,
                                common.make_eval_spec(spec, n=60),
-                               n_clusters, tuple(range(args.seeds)), cfg)
+                               n_clusters, tuple(range(args.seeds)), cfg,
+                               fused=fused)
 
     print(f"\n=== MT-HFL on {args.dataset} "
           f"({args.rounds} global rounds, {args.seeds} seeds) ===")

@@ -27,7 +27,8 @@ from repro.fed import partition as part
 
 PyTree = Any
 
-__all__ = ["lps_round", "gps_aggregate", "masked_cluster_mean"]
+__all__ = ["lps_round", "gps_aggregate", "gps_aggregate_stacked",
+           "masked_cluster_mean"]
 
 
 def lps_round(cluster_client_params: Sequence[PyTree],
@@ -49,6 +50,41 @@ def gps_aggregate(lps_params: Sequence[PyTree],
     specifics = [s for _, s in splits]
     avg_common = _wmean(commons, list(cluster_weights))
     return [part.merge_params(avg_common, s) for s in specifics]
+
+
+def gps_aggregate_stacked(stack: PyTree, cluster_weights: jax.Array,
+                          is_common: part.PathPred,
+                          axis: str | None = None) -> PyTree:
+    """In-jit GPS round over CLUSTER-STACKED params (leaves ``(T, ...)``).
+
+    The traceable counterpart of ``gps_aggregate`` used by the fused
+    MT-HFL trainer: common leaves are replaced by their
+    ``cluster_weights``-weighted mean over the leading cluster axis and
+    broadcast back; task-specific leaves pass through untouched.  Empty
+    clusters carry weight 0 and so are excluded from the average (they
+    still RECEIVE the broadcast common part, like any LPS).
+
+    ``axis``: mesh axis to psum over when the cluster axis is sharded
+    under ``shard_map`` (same idiom as ``masked_cluster_mean``); ``None``
+    for single-host.  If every weight is zero the stack is returned
+    unchanged.
+    """
+    w = jnp.asarray(cluster_weights, jnp.float32)
+    total = jnp.sum(w)
+    if axis is not None:
+        total = jax.lax.psum(total, axis)
+    wn = w / jnp.maximum(total, 1e-8)
+
+    def leaf(path, v):
+        if not is_common(path):
+            return v
+        num = jnp.tensordot(wn, v.astype(jnp.float32), axes=1)
+        if axis is not None:
+            num = jax.lax.psum(num, axis)
+        avg = jnp.broadcast_to(num[None], v.shape)
+        return jnp.where(total > 0, avg, v.astype(jnp.float32)).astype(v.dtype)
+
+    return part.tree_path_map(leaf, stack)
 
 
 def masked_cluster_mean(values: PyTree, onehot: jax.Array,

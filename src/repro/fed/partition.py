@@ -12,7 +12,8 @@ from typing import Any, Callable, Iterable, Mapping
 PyTree = Any
 PathPred = Callable[[tuple[str, ...]], bool]
 
-__all__ = ["tree_paths", "prefix_predicate", "split_params", "merge_params"]
+__all__ = ["tree_paths", "prefix_predicate", "split_params", "merge_params",
+           "tree_path_map"]
 
 
 def tree_paths(tree: Mapping, prefix: tuple[str, ...] = ()) -> list[tuple[str, ...]]:
@@ -45,6 +46,23 @@ def prefix_predicate(prefixes: Iterable[str | tuple[str, ...]]) -> PathPred:
         return any(joined == p or joined.startswith(p + "/") for p in norm)
 
     return pred
+
+
+def tree_path_map(fn: Callable[[tuple[str, ...], Any], Any],
+                  tree: Mapping, prefix: tuple[str, ...] = ()) -> dict:
+    """Map ``fn(path, leaf)`` over a nested-dict pytree, keeping structure.
+
+    Unlike ``split_params`` this never changes the tree shape, which makes
+    it the right tool for in-jit transforms that must stay structurally
+    stable (e.g. averaging only the common leaves of a cluster-stacked
+    parameter tree inside ``shard_map``).
+    """
+    out = {}
+    for k, v in tree.items():
+        p = prefix + (str(k),)
+        out[k] = (tree_path_map(fn, v, p) if isinstance(v, Mapping)
+                  else fn(p, v))
+    return out
 
 
 def split_params(params: Mapping, is_common: PathPred

@@ -1,0 +1,97 @@
+"""Property-based tests for the one-shot similarity protocol.
+
+Structural invariants the paper's Eqs. 1-5 imply, checked across ALL three
+``ProtocolEngine`` backends (jnp / pallas / shard_map) via the
+``_hypothesis_compat`` shim (real hypothesis when installed, a
+deterministic sample grid otherwise):
+
+* **Symmetry** — Eq. 5 averages the two directed views, so R == R^T.
+* **Permutation equivariance** — relabeling users permutes rows/cols of R
+  and nothing else (the protocol has no user-order dependence).
+* **Scale invariance** — features scaled by c scale every Gram eigenvalue
+  by c^2, which cancels in the min/max eigenvalue ratios (away from the
+  ``eig_floor`` clamp).
+* **pad_ragged round-trip** — the padded batch preserves every user's rows
+  and reports the exact ``n_valid`` counts, for arbitrary ragged shapes.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import similarity as sim
+from repro.core.engine import BACKENDS, ProtocolEngine
+
+
+def _feats(n_users, d, seed=0, n_samples=24):
+    rng = np.random.default_rng(seed)
+    # A mild task mixture (two feature scales) so R has structure.
+    f = rng.standard_normal((n_users, n_samples, d)).astype(np.float32)
+    f[: n_users // 2] *= 1.5
+    return jnp.asarray(f)
+
+
+def _engine(backend, **cfg_kw):
+    return ProtocolEngine(sim.SimilarityConfig(top_k=4, backend=backend,
+                                               **cfg_kw))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+class TestSimilarityInvariants:
+    @given(n_users=st.integers(4, 12))
+    @settings(max_examples=6, deadline=None)
+    def test_symmetric(self, backend, n_users):
+        r = np.asarray(_engine(backend).similarity(_feats(n_users, 8)))
+        np.testing.assert_allclose(r, r.T, atol=1e-6)
+
+    @given(seed=st.integers(0, 100))
+    @settings(max_examples=6, deadline=None)
+    def test_permutation_equivariant(self, backend, seed):
+        feats = _feats(8, 8, seed=seed)
+        perm = np.random.default_rng(seed + 1).permutation(8)
+        r = np.asarray(_engine(backend).similarity(feats))
+        r_perm = np.asarray(_engine(backend).similarity(feats[perm]))
+        np.testing.assert_allclose(r_perm, r[np.ix_(perm, perm)], atol=1e-5)
+
+    @given(scale=st.floats(0.25, 4.0))
+    @settings(max_examples=6, deadline=None)
+    def test_scale_invariant(self, backend, scale):
+        feats = _feats(6, 8)
+        eng = _engine(backend, eig_floor=1e-12)
+        r = np.asarray(eng.similarity(feats))
+        r_scaled = np.asarray(eng.similarity(feats * scale))
+        np.testing.assert_allclose(r_scaled, r, atol=1e-4)
+
+    def test_diagonal_is_self_similarity_one(self, backend):
+        r = np.asarray(_engine(backend).similarity(_feats(6, 8)))
+        np.testing.assert_allclose(np.diag(r), 1.0, atol=1e-4)
+
+
+class TestPadRaggedRoundTrip:
+    @given(n_users=st.integers(1, 8), base=st.integers(1, 40))
+    @settings(max_examples=8, deadline=None)
+    def test_round_trips_n_valid(self, n_users, base):
+        rng = np.random.default_rng(base * 7 + n_users)
+        counts = [int(rng.integers(1, base + 1)) for _ in range(n_users)]
+        d = int(rng.integers(1, 9))
+        ragged = [rng.standard_normal((n, d)).astype(np.float32)
+                  for n in counts]
+        padded, n_valid = sim.pad_ragged(ragged)
+        assert padded.shape == (n_users, max(counts), d)
+        np.testing.assert_array_equal(np.asarray(n_valid), counts)
+        for i, f in enumerate(ragged):
+            np.testing.assert_array_equal(np.asarray(padded[i, : counts[i]]),
+                                          f)
+            assert not np.asarray(padded[i, counts[i]:]).any()
+
+    def test_padded_protocol_matches_ragged_list(self):
+        """Feeding (padded, n_valid) must equal feeding the ragged list —
+        the contract ``prepare`` gives every backend."""
+        rng = np.random.default_rng(5)
+        ragged = [rng.standard_normal((n, 6)).astype(np.float32)
+                  for n in (9, 17, 4, 12)]
+        eng = _engine("jnp")
+        r_list = np.asarray(eng.similarity(ragged))
+        padded, nv = sim.pad_ragged(ragged)
+        r_pad = np.asarray(eng.similarity(padded, n_valid=nv))
+        np.testing.assert_allclose(r_pad, r_list, atol=1e-6)

@@ -1,0 +1,258 @@
+"""Parity + property net for the fused MT-HFL trainer (the ISSUE's
+acceptance tests).
+
+The fused super-stack program (vmap over clusters, lax.scan over local
+rounds, in-jit GPS — jnp and shard_map backends, per-round and
+whole-run-scan dispatch) must reproduce the retained reference loop's
+``MTHFLHistory`` to 1e-5 on synthetic users across T in {1, 2, 4},
+including ragged membership and an empty cluster.  Also locked down here:
+per-cluster key streams make results independent of cluster numbering, and
+empty clusters report NaN instead of evaluating never-trained params.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.partition import UserData
+from repro.fed import client as fclient
+from repro.fed import partition as fpart
+from repro.fed import trainer as ftrainer
+from repro.models import mlp
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+M, NCLS = 12, 4
+CENTERS = np.random.default_rng(42).standard_normal((NCLS, M)).astype(
+    np.float32)
+
+# Per-cluster lists of per-user sample counts; [] is an EMPTY cluster.
+LAYOUTS = {
+    "T1": [[40, 25, 33]],
+    "T2-ragged": [[40, 25], [30]],
+    "T4-ragged-empty": [[40], [25, 33, 20], [], [30, 8]],
+}
+
+MCFG = mlp.PaperMLPConfig(m=M, hidden=8, n_classes=NCLS)
+BASE_CFG = ftrainer.MTHFLConfig(
+    global_rounds=3, local_rounds=2, local_steps=4, batch_size=8,
+    client=fclient.ClientConfig(lr=0.1), seed=0)
+
+
+def make_users(layout, seed=0):
+    rng = np.random.default_rng(seed)
+    users, labels = [], []
+    uid = 0
+    for t, cluster in enumerate(layout):
+        for n in cluster:
+            y = rng.integers(0, NCLS, n).astype(np.int32)
+            x = (CENTERS[y]
+                 + 0.3 * rng.standard_normal((n, M))).astype(np.float32)
+            users.append(UserData(user_id=uid, task_id=t, x=x, y=y,
+                                  task_classes=tuple(range(NCLS))))
+            labels.append(t)
+            uid += 1
+    return users, np.asarray(labels)
+
+
+def build_models(n_clusters, mcfg=MCFG):
+    return [ftrainer.TaskModel(
+        init=lambda k, c=mcfg: mlp.init(c, k),
+        loss_fn=mlp.loss_fn(mcfg),
+        accuracy=lambda p, x, y, c=mcfg: mlp.accuracy(c, p, x, y),
+        is_common=fpart.prefix_predicate(mlp.COMMON_PREFIXES))
+        for _ in range(n_clusters)]
+
+
+def make_evals(n_clusters, n_classes=NCLS, seed=1):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_clusters):
+        y = rng.integers(0, n_classes, 32).astype(np.int32)
+        x = (CENTERS[y]
+             + 0.3 * rng.standard_normal((32, M))).astype(np.float32)
+        out.append((jnp.asarray(x), y))
+    return out
+
+
+def run(layout, fused, cfg=BASE_CFG, **cfg_overrides):
+    users, labels = make_users(layout)
+    n_clusters = len(layout)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    return ftrainer.train_mthfl(
+        users, labels, build_models(n_clusters), make_evals(n_clusters),
+        cfg, cluster_classes=[list(range(NCLS))] * n_clusters, fused=fused)
+
+
+def assert_history_close(a, b, atol=1e-5):
+    np.testing.assert_allclose(a.accuracy, b.accuracy, atol=atol)
+    np.testing.assert_allclose(a.train_loss, b.train_loss, atol=atol)
+
+
+class TestFusedParity:
+    """Fused == reference to 1e-5 — the tentpole's acceptance criterion."""
+
+    @pytest.mark.parametrize("layout", LAYOUTS.values(),
+                             ids=list(LAYOUTS))
+    def test_fused_matches_reference(self, layout):
+        ref = run(layout, fused=False)
+        fus = run(layout, fused=True)
+        assert not ref.fused and fus.fused
+        assert_history_close(fus, ref)
+
+    @pytest.mark.parametrize("layout", LAYOUTS.values(),
+                             ids=list(LAYOUTS))
+    def test_shard_map_matches_reference(self, layout):
+        ref = run(layout, fused=False)
+        fus = run(layout, fused=True, backend="shard_map")
+        assert_history_close(fus, ref)
+
+    def test_scan_rounds_matches_reference(self):
+        layout = LAYOUTS["T4-ragged-empty"]
+        ref = run(layout, fused=False)
+        for backend in ftrainer.TRAINER_BACKENDS:
+            fus = run(layout, fused=True, backend=backend, scan_rounds=True)
+            assert_history_close(fus, ref)
+
+    def test_auto_uses_fused_when_stackable(self):
+        hist = run(LAYOUTS["T2-ragged"], fused="auto")
+        assert hist.fused
+
+
+class TestEmptyClusterMasking:
+    def test_empty_cluster_reports_nan(self):
+        layout = LAYOUTS["T4-ragged-empty"]
+        for fused in (False, True):
+            hist = run(layout, fused=fused)
+            assert np.isnan(hist.accuracy[:, 2]).all()
+            assert np.isnan(hist.train_loss[:, 2]).all()
+            keep = [0, 1, 3]
+            assert np.isfinite(hist.accuracy[:, keep]).all()
+            assert np.isfinite(hist.train_loss[:, keep]).all()
+
+    def test_empty_cluster_has_no_gps_weight(self):
+        """The occupied clusters must train identically whether the empty
+        cluster exists or not (it must not drag its never-trained params
+        into the GPS common average)."""
+        users3, labels3 = make_users([[40, 25], [], [30]])
+        evals3 = make_evals(3)
+        with_empty = ftrainer.train_mthfl(
+            users3, labels3, build_models(3), evals3, BASE_CFG,
+            cluster_classes=[list(range(NCLS))] * 3, fused=True)
+        # Same users, same eval sets, the empty cluster dropped: members of
+        # the old cluster 2 now carry label 1.
+        users2, labels2 = make_users([[40, 25], [30]])
+        without = ftrainer.train_mthfl(
+            users2, labels2, build_models(2), [evals3[0], evals3[2]],
+            BASE_CFG, cluster_classes=[list(range(NCLS))] * 2, fused=True)
+        np.testing.assert_allclose(with_empty.accuracy[:, [0, 2]],
+                                   without.accuracy, atol=1e-5)
+        np.testing.assert_allclose(with_empty.train_loss[:, [0, 2]],
+                                   without.train_loss, atol=1e-5)
+
+
+class TestClusterStreamDeterminism:
+    """Per-cluster key streams derived from cfg.seed + member ids: results
+    must not depend on how clusters happen to be numbered (the seed shared
+    one np RNG across clusters, so iteration order leaked into results)."""
+
+    @pytest.mark.parametrize("fused", [False, True])
+    def test_reordering_clusters_permutes_history(self, fused):
+        layout = [[40], [25, 33], [30, 8]]
+        perm = [2, 0, 1]                       # new index of old cluster t
+        users, labels = make_users(layout)
+        n_clusters = len(layout)
+        models, evals = build_models(n_clusters), make_evals(n_clusters)
+        cc = [list(range(NCLS))] * n_clusters
+        hist = ftrainer.train_mthfl(users, labels, models, evals, BASE_CFG,
+                                    cluster_classes=cc, fused=fused)
+
+        labels2 = np.asarray([perm[l] for l in labels])
+        old_of_new = np.argsort(perm)
+        evals2 = [evals[o] for o in old_of_new]
+        hist2 = ftrainer.train_mthfl(users, labels2, models, evals2,
+                                     BASE_CFG, cluster_classes=cc,
+                                     fused=fused)
+        np.testing.assert_allclose(hist2.accuracy[:, perm], hist.accuracy,
+                                   atol=1e-5)
+        np.testing.assert_allclose(hist2.train_loss[:, perm],
+                                   hist.train_loss, atol=1e-5)
+
+    def test_same_seed_reproduces(self):
+        a = run(LAYOUTS["T2-ragged"], fused=True)
+        b = run(LAYOUTS["T2-ragged"], fused=True)
+        np.testing.assert_array_equal(a.accuracy, b.accuracy)
+
+    def test_different_seed_differs(self):
+        a = run(LAYOUTS["T2-ragged"], fused=True)
+        b = run(LAYOUTS["T2-ragged"], fused=True, seed=1)
+        assert not np.allclose(a.train_loss, b.train_loss)
+
+
+class TestFusedApi:
+    def _hetero_setup(self):
+        users, labels = make_users([[40, 25], [30]])
+        cc = [[0, 1, 2, 3], [0, 1]]            # 4-way vs 2-way heads
+        models = [build_models(1, MCFG)[0],
+                  build_models(1, mlp.PaperMLPConfig(
+                      m=M, hidden=8, n_classes=2))[0]]
+        evals = [make_evals(1, n_classes=4)[0], make_evals(1, n_classes=2)[0]]
+        return users, labels, models, evals, cc
+
+    def test_fused_true_heterogeneous_raises(self):
+        users, labels, models, evals, cc = self._hetero_setup()
+        with pytest.raises(ValueError, match="stack"):
+            ftrainer.train_mthfl(users, labels, models, evals, BASE_CFG,
+                                 cluster_classes=cc, fused=True)
+
+    def test_auto_falls_back_heterogeneous(self):
+        users, labels, models, evals, cc = self._hetero_setup()
+        hist = ftrainer.train_mthfl(users, labels, models, evals, BASE_CFG,
+                                    cluster_classes=cc, fused="auto")
+        assert not hist.fused
+        assert np.isfinite(hist.accuracy).all()
+
+    def test_unknown_backend_rejected(self):
+        with pytest.raises(ValueError, match="backend"):
+            run(LAYOUTS["T1"], fused=True, backend="cuda")
+
+
+SHARD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import sys
+    sys.path.insert(0, {testdir!r})
+    import jax, numpy as np
+    from test_trainer_parity import LAYOUTS, run, assert_history_close
+
+    assert len(jax.devices()) == 4
+    layout = LAYOUTS["T4-ragged-empty"]
+    ref = run(layout, fused=False)
+    for scan in (False, True):
+        fus = run(layout, fused=True, backend="shard_map", scan_rounds=scan)
+        assert_history_close(fus, ref)
+    # Non-divisible cluster axis: 3 clusters over 4 devices -> padded.
+    ref3 = run(LAYOUTS["T2-ragged"], fused=False)
+    fus3 = run(LAYOUTS["T2-ragged"], fused=True, backend="shard_map")
+    assert_history_close(fus3, ref3)
+    print("TRAINER_SHARD_PARITY_OK")
+""").format(testdir=str(Path(__file__).resolve().parent))
+
+
+def test_shard_map_parity_4dev():
+    """Fused shard_map on 4 forced host devices == reference loop,
+    including a cluster count that does not divide the mesh."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", SHARD_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "TRAINER_SHARD_PARITY_OK" in res.stdout
