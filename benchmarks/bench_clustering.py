@@ -1,0 +1,136 @@
+"""GPS decision-layer benchmark: host-numpy HAC vs the device NN-chain.
+
+The reference ``core/clustering.py::hac`` pays a full-matrix argmax per
+merge (O(N^3) total) on the host; the ``ClusterEngine`` jnp backend runs
+nearest-neighbor-chain HAC as one jitted ``lax.while_loop`` (O(N^2)), and
+the pallas backend swaps the inner step for the fused ``kernels/linkage``
+row-update + argmax kernel.
+
+Grid: N in {256, 1024, 4096} users (``--quick``: 256 only), 8-block
+similarity matrices.  Every timed point asserts LABEL PARITY against the
+numpy reference (ARI == 1 up to cluster relabelling).  The pallas point
+runs at N=256 only by default — off-TPU it executes in interpret mode,
+which measures the interpreter, not the kernel (``--pallas-all`` lifts
+the cap on real hardware).
+
+Acceptance (ISSUE 3): jnp >= 5x numpy wall-clock at N=4096 on CPU,
+recorded in the JSON written to ``--json``.
+
+Standalone: ``PYTHONPATH=src:. python benchmarks/bench_clustering.py --quick``
+(CI smoke: N=256, same code paths, parity still asserted).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import clustering as clu
+from repro.core.cluster_engine import ClusterConfig, ClusterEngine
+
+N_BLOCKS = 8
+LINKAGES = ("average", "single", "complete")
+
+
+def block_similarity(n: int, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """8-block task structure + noise: the protocol-output regime, and a
+    shape whose cut labels are robust to f32-vs-f64 tie dithering."""
+    rng = np.random.default_rng(seed)
+    sizes = [n // N_BLOCKS] * N_BLOCKS
+    sizes[-1] += n - sum(sizes)
+    labels = np.repeat(np.arange(N_BLOCKS), sizes)
+    r = np.where(labels[:, None] == labels[None, :], 0.9, 0.2)
+    r = r + rng.uniform(-0.02, 0.02, size=(n, n))
+    r = (r + r.T) / 2
+    np.fill_diagonal(r, 1.0)
+    return r, labels
+
+
+def _time_numpy(r: np.ndarray, linkage: str) -> tuple[float, np.ndarray]:
+    t0 = time.perf_counter()
+    labels = clu.hac_clusters(r, N_BLOCKS, linkage)
+    return time.perf_counter() - t0, labels
+
+
+def _time_engine(r: np.ndarray, backend: str, linkage: str,
+                 n_iter: int = 3) -> tuple[float, np.ndarray]:
+    eng = ClusterEngine(ClusterConfig(backend=backend, linkage=linkage))
+    labels = jax.block_until_ready(eng.labels(r, N_BLOCKS))   # compile
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        labels = jax.block_until_ready(eng.labels(r, N_BLOCKS))
+    return (time.perf_counter() - t0) / n_iter, np.asarray(labels)
+
+
+def bench_point(n: int, linkage: str, run_pallas: bool
+                ) -> tuple[list[str], dict]:
+    r, _ = block_similarity(n)
+    s_np, lab_np = _time_numpy(r, linkage)
+    s_jnp, lab_jnp = _time_engine(r, "jnp", linkage)
+    parity_jnp = float(clu.adjusted_rand_index(lab_jnp, lab_np))
+    assert parity_jnp == 1.0, (
+        f"jnp/numpy HAC label parity broken at N={n} ({linkage}): "
+        f"ARI={parity_jnp}")
+    rec = {
+        "N": n, "linkage": linkage,
+        "numpy_s": round(s_np, 4),
+        "jnp_s": round(s_jnp, 4),
+        "speedup_jnp_vs_numpy": round(s_np / s_jnp, 2),
+        "parity_jnp": True,
+    }
+    if run_pallas:
+        s_pl, lab_pl = _time_engine(r, "pallas", linkage, n_iter=1)
+        parity_pl = float(clu.adjusted_rand_index(lab_pl, lab_np))
+        assert parity_pl == 1.0, (
+            f"pallas/numpy HAC label parity broken at N={n} ({linkage})")
+        rec["pallas_s"] = round(s_pl, 4)
+        rec["parity_pallas"] = True
+        rec["pallas_interpret"] = jax.default_backend() != "tpu"
+    rows = [common.row(
+        f"hac_N{n}_{linkage}", s_jnp * 1e6,
+        numpy_us=round(s_np * 1e6, 1),
+        speedup_vs_numpy=rec["speedup_jnp_vs_numpy"],
+        parity=True)]
+    return rows, rec
+
+
+def run(quick: bool = False, pallas_all: bool = False,
+        json_path: str | None = None) -> list[str]:
+    grid = [256] if quick else [256, 1024, 4096]
+    on_tpu = jax.default_backend() == "tpu"
+    rows, records = [], []
+    for n in grid:
+        # All three linkages at the smallest point (parity coverage); the
+        # scaling points time the paper's default average linkage.
+        linkages = LINKAGES if n == grid[0] else ("average",)
+        for lk in linkages:
+            run_pallas = (lk == "average") and (n == 256 or pallas_all
+                                                or on_tpu)
+            r, rec = bench_point(n, lk, run_pallas)
+            rows.extend(r)
+            records.append(rec)
+        jax.clear_caches()
+    payload = {"quick": quick, "n_blocks": N_BLOCKS,
+               "backend": jax.default_backend(), "grid": records}
+    if json_path:
+        common.record_result(json_path, payload)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: N=256 only, same code paths")
+    ap.add_argument("--pallas-all", action="store_true",
+                    help="run the pallas backend at every N (slow off-TPU: "
+                         "interpret mode)")
+    ap.add_argument("--json",
+                    default="benchmarks/results/bench_clustering.json",
+                    help="where to record the speedup grid")
+    args = ap.parse_args()
+    for r in run(quick=args.quick, pallas_all=args.pallas_all,
+                 json_path=args.json):
+        print(r, flush=True)

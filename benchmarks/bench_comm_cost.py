@@ -1,7 +1,14 @@
 """Paper §III "Communication Improvement": one-shot clustering bytes vs a
 weight-exchange iterative clustering round, for both paper models and a
 transformer arch — the clustering cost is model-size independent, the
-iterative baseline is not."""
+iterative baseline is not.
+
+The ledger is parameterized over wire precision (``dtype_bytes``) and
+exchange pattern: ``broadcast`` is the paper's star topology (each user
+receives N-1 per-peer V_j transfers), ``streaming`` is the blockwise
+engine mode (one O(N*d*k) signature-table fetch from the GPS per user,
+no per-peer duplicates) — the mode ``one_shot_clustering`` reports when
+``block_users > 0``."""
 from __future__ import annotations
 
 from benchmarks import common
@@ -27,4 +34,15 @@ def run() -> list[str]:
             oneshot_upload_bytes=s["per_user_upload_bytes"],
             iterative_round_bytes=s["iterative_per_round_upload_bytes"],
             ratio=round(s["oneshot_vs_iterative_ratio"], 6)))
+    # Streaming (blockwise) accounting at protocol scale, fp32 and bf16
+    # wire precision: the per-user download is the one-shot table fetch.
+    for dtype_bytes, tag in ((4, "fp32"), (2, "bf16")):
+        led = CommLedger(n_users=4096, d=64, top_k=8,
+                         dtype_bytes=dtype_bytes, mode="streaming")
+        s = led.summary()
+        rows.append(common.row(
+            f"comm_streaming_4096users_{tag}", 0.0,
+            per_user_download_bytes=s["per_user_download_bytes"],
+            signature_table_bytes=s["signature_table_bytes"],
+            gps_total_bytes=s["gps_total_bytes"]))
     return rows

@@ -27,9 +27,7 @@ Standalone: ``PYTHONPATH=src:. python benchmarks/bench_trainer.py --quick``
 from __future__ import annotations
 
 import argparse
-import json
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -140,10 +138,8 @@ def run(quick: bool = False, n_rounds: int = 4,
         records.append(rec)
         jax.clear_caches()
     if json_path:
-        Path(json_path).parent.mkdir(parents=True, exist_ok=True)
-        Path(json_path).write_text(json.dumps(
-            {"quick": quick, "rounds": n_rounds, "grid": records},
-            indent=2) + "\n")
+        common.record_result(json_path, {"quick": quick, "rounds": n_rounds,
+                                         "grid": records})
     return rows
 
 

@@ -3,7 +3,9 @@ the Fig. 2 / Fig. 3 reproductions."""
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
+from pathlib import Path
 from typing import Callable, Sequence
 
 import jax.numpy as jnp
@@ -31,6 +33,18 @@ def time_us(fn: Callable, n_iter: int = 5, warmup: int = 1) -> float:
 def row(name: str, us: float, **derived) -> str:
     kv = ";".join(f"{k}={v}" for k, v in derived.items())
     return f"{name},{us:.1f},{kv}"
+
+
+def record_result(json_path: str | Path, payload: dict) -> None:
+    """Write one benchmark's JSON record under ``benchmarks/results/``.
+
+    The single JSON-writing path shared by ``bench_trainer`` and
+    ``bench_clustering`` (creates parent dirs, pretty-prints, trailing
+    newline), so recorded artifacts stay diff-friendly and uniform.
+    """
+    p = Path(json_path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(payload, indent=2) + "\n")
 
 
 def mthfl_compare(users, tasks: dict, model_builder: Callable,

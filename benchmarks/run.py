@@ -19,13 +19,14 @@ import sys
 import time
 
 SUITES = ["table1", "table2", "fig2", "fig3", "fig4", "comm", "ifca",
-          "robustness", "kernels", "roofline"]
+          "robustness", "kernels", "clustering", "roofline"]
 
 
 def run_suite(name: str, seeds: int) -> list[str]:
-    from benchmarks import (bench_comm_cost, bench_fig2_cifar,
-                            bench_fig3_fmnist, bench_fig4_eigvectors,
-                            bench_ifca, bench_kernels, bench_robustness,
+    from benchmarks import (bench_clustering, bench_comm_cost,
+                            bench_fig2_cifar, bench_fig3_fmnist,
+                            bench_fig4_eigvectors, bench_ifca,
+                            bench_kernels, bench_robustness,
                             bench_roofline, bench_table1_similarity,
                             bench_table2_crossdataset)
 
@@ -40,6 +41,9 @@ def run_suite(name: str, seeds: int) -> list[str]:
         "ifca": lambda: bench_ifca.run(),
         "robustness": lambda: bench_robustness.run(),
         "kernels": lambda: bench_kernels.run(),
+        # quick grid inside the harness; the full N=4096 sweep (which
+        # times the O(N^3) host reference once) runs standalone
+        "clustering": lambda: bench_clustering.run(quick=True),
         "roofline": lambda: bench_roofline.run(),
     }
     return fns[name]()

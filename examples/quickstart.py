@@ -6,17 +6,28 @@ HAC), and prints the similarity matrix, the recovered clusters, and the
 communication ledger.
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --cluster-backend jnp
 """
+import argparse
+
 import numpy as np
 
 from repro.core import clustering as clu
 from repro.core import oneshot
+from repro.core.cluster_engine import ClusterConfig
 from repro.core.similarity import SimilarityConfig
 from repro.data import features as feat
 from repro.data import partition as dpart
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cluster-backend", default="numpy",
+                    choices=["numpy", "jnp", "pallas"],
+                    help="GPS decision layer: host reference HAC or the "
+                         "device NN-chain ClusterEngine")
+    args = ap.parse_args()
+
     # 10 users, 2 tasks (vehicles / animals), 10% minority labels.
     users = dpart.paper_cifar_two_task(n_per_user=400, seed=0)
     print(f"{len(users)} users; true tasks:",
@@ -28,13 +39,15 @@ def main():
 
     res = oneshot.one_shot_clustering(
         feats, n_clusters=2, cfg=SimilarityConfig(top_k=8),
+        cluster_cfg=ClusterConfig(backend=args.cluster_backend),
         model_params=62_006)  # paper CNN size, for the comm comparison
 
     np.set_printoptions(precision=2, suppress=True)
     print("\nSimilarity matrix R (paper Table I analogue):")
-    print(res.similarity)
-    print("\nClusters:", res.labels)
-    acc = clu.clustering_accuracy(res.labels, [u.task_id for u in users])
+    print(np.asarray(res.similarity))
+    labels = np.asarray(res.labels)
+    print(f"\nClusters ({args.cluster_backend} backend):", labels)
+    acc = clu.clustering_accuracy(labels, [u.task_id for u in users])
     print(f"Clustering accuracy vs oracle: {acc:.0%}")
     print("\nCommunication ledger (one-shot, before any training):")
     for k, v in res.ledger.summary().items():

@@ -9,4 +9,6 @@ from repro.core.clustering import (hac, cut, hac_clusters, random_clusters,
                                    oracle_clusters, spectral_clusters,
                                    clustering_accuracy, adjusted_rand_index,
                                    Dendrogram)
+from repro.core.cluster_engine import (ClusterConfig, ClusterEngine,
+                                       DeviceDendrogram, CLUSTER_BACKENDS)
 from repro.core.oneshot import one_shot_clustering, OneShotResult, CommLedger

@@ -1,0 +1,358 @@
+"""Backend-pluggable GPS decision layer (paper §II-C) — the ClusterEngine.
+
+``core/clustering.py`` keeps the pure-numpy reference HAC: a greedy
+full-matrix argmax per merge, O(N^3) work, host-resident.  This module is
+its device-side counterpart, mirroring ``core/engine.py``'s
+``ProtocolEngine`` idiom — one object, a config-selected backend:
+
+  backend   | execution
+  ----------|------------------------------------------------------------
+  "numpy"   | the reference: ``clustering.hac`` / ``clustering.cut`` /
+            | ``clustering.spectral_clusters`` on the host
+  "jnp"     | nearest-neighbor-chain HAC as ONE jitted ``lax.while_loop``
+            | over an on-device linkage matrix — O(N^2) work and memory
+  "pallas"  | the same program with the fused ``kernels/linkage``
+            | row-update + argmax kernel as the inner step
+
+The NN-chain algorithm (Benzecri / Murtagh): walk nearest-neighbour
+links until a *reciprocal* pair is found, merge it, continue from the
+remaining chain.  For the reducible linkages (single / complete /
+average all satisfy ``s(x, a∪b) <= max(s(x, a), s(x, b))`` in similarity
+space) the set of reciprocal-NN merges is exactly the greedy dendrogram,
+so sorting the chain-order merges by height recovers the reference
+merge sequence up to tie order.  Each loop step is O(N) — a row argmax,
+plus a Lance-Williams row update on merges — for O(N^2) total instead of
+the reference's O(N^2) argmax per merge.
+
+``R`` produced by the ``ProtocolEngine`` therefore never leaves the
+device between protocol and trainer: ``hac`` ingests the device array,
+``cut`` extracts labels with a top-(N-T)-by-height union forest plus
+log(N) pointer-jumping rounds, and the labels feed
+``fed.partition.stack_layout`` directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clustering as clu
+from repro.kernels.linkage.ref import LINKAGES, linkage_step_ref
+
+__all__ = ["ClusterConfig", "ClusterEngine", "DeviceDendrogram",
+           "CLUSTER_BACKENDS"]
+
+CLUSTER_BACKENDS = ("numpy", "jnp", "pallas")
+
+_NEG = -jnp.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    """Configuration of the GPS decision layer.
+
+    Attributes:
+      backend: "numpy" (host reference), "jnp" (device NN-chain HAC) or
+        "pallas" (NN-chain with the fused ``kernels/linkage`` inner step).
+      linkage: "average" | "single" | "complete" (similarity semantics).
+      interpret: Pallas interpret-mode override (default: interpret off
+        TPU), consulted by the pallas backend only.
+    """
+
+    backend: str = "numpy"
+    linkage: str = "average"
+    interpret: bool | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceDendrogram:
+    """Merge history of the device NN-chain HAC, in CHAIN order.
+
+    ``merge_rows[t] = (i, j)``: at chain step ``t`` the cluster living at
+    row ``j`` merged into row ``i`` (``i < j``; rows are matrix indices,
+    not dendrogram node ids) at similarity ``heights[t]``.  Chain order
+    is NOT height order — ``to_host()`` sorts into the greedy sequence.
+    """
+
+    n_leaves: int
+    merge_rows: jax.Array          # (N-1, 2) int32, (surviving, dying)
+    heights: jax.Array             # (N-1,) float32
+
+    def to_host(self) -> clu.Dendrogram:
+        """Greedy-order ``clustering.Dendrogram`` (sort by height desc,
+        replay to assign node ids) — the bridge to host-side ``cut`` and
+        the dendrogram-invariant tests."""
+        rows = np.asarray(self.merge_rows)
+        h = np.asarray(self.heights, dtype=np.float64)
+        order = np.argsort(-h, kind="stable")
+        node_of = {int(i): int(i) for i in range(self.n_leaves)}
+        merges = []
+        for t, m in enumerate(order):
+            i, j = int(rows[m, 0]), int(rows[m, 1])
+            merges.append((node_of[i], node_of[j], float(h[m])))
+            node_of[i] = self.n_leaves + t
+        return clu.Dendrogram(n_leaves=self.n_leaves, merges=tuple(merges))
+
+
+# ---------------------------------------------------------------------------
+# Device NN-chain HAC
+# ---------------------------------------------------------------------------
+
+def _step_fn(impl: str, linkage: str, interpret: bool | None):
+    """The fused inner step: Lance-Williams row update + masked argmax."""
+    if impl == "pallas":
+        from repro.kernels.linkage import ops as lk_ops
+
+        return partial(lk_ops.linkage_step, linkage=linkage,
+                       interpret=interpret)
+    return partial(linkage_step_ref, linkage=linkage)
+
+
+@partial(jax.jit, static_argnames=("n", "linkage", "impl", "interpret"))
+def _nn_chain(s, alive0, *, n: int, linkage: str, impl: str,
+              interpret: bool | None):
+    """NN-chain HAC over a prepared linkage matrix.
+
+    ``s (Np, Np)`` f32 with dead rows/cols (padding) and the diagonal at
+    ``-inf``; ``alive0 (Np,)`` bool marks the ``n`` real leaves.  Returns
+    ``(merge_rows (n-1, 2) i32, heights (n-1,) f32)`` in chain order.
+
+    Every iteration either extends the chain (one fused argmax) or pops a
+    reciprocal pair and merges it (one fused row-update + argmax).  Chain
+    similarities strictly increase, so iterations are bounded by ~4n; the
+    cap is a safety net, not a tuning knob.
+    """
+    np_pad = s.shape[0]
+    step = _step_fn(impl, linkage, interpret)
+    one = jnp.float32(1.0)
+    cols = jnp.arange(np_pad, dtype=jnp.int32)
+
+    def cond(st):
+        s_, size, alive, chain, clen, mi, mj, hh, t, it = st
+        return (t < n - 1) & (it < 4 * n + 8)
+
+    def body(st):
+        s_, size, alive, chain, clen, mi, mj, hh, t, it = st
+        # Re-seed an empty chain with the smallest alive row.
+        seed = jnp.argmax(alive).astype(jnp.int32)
+        chain = jnp.where(clen == 0, chain.at[0].set(seed), chain)
+        clen = jnp.maximum(clen, 1)
+        top = chain[clen - 1]
+        prev = chain[jnp.maximum(clen - 2, 0)]
+
+        row_top = jax.lax.dynamic_slice(s_, (top, 0), (1, np_pad))[0]
+        mask_top = alive & (cols != top)
+        _, nn, best = step(row_top, row_top, one, one, mask_top)
+        prev_sim = jnp.where(clen >= 2, row_top[prev], _NEG)
+        # prev is on the chain as top's predecessor, so ``prev_sim >=
+        # best`` means prev attains top's row max: a reciprocal pair.
+        do_merge = (clen >= 2) & (prev_sim >= best)
+
+        def merge(_):
+            i = jnp.minimum(top, prev)
+            j = jnp.maximum(top, prev)
+            na = size[i]
+            nb = size[j]
+            alive2 = alive.at[j].set(False)
+            mask_m = alive2 & (cols != i)
+            row_i = jax.lax.dynamic_slice(s_, (i, 0), (1, np_pad))[0]
+            row_j = jax.lax.dynamic_slice(s_, (j, 0), (1, np_pad))[0]
+            new_row, _, _ = step(row_i, row_j, na, nb, mask_m)
+            dead = jnp.full((np_pad,), _NEG, jnp.float32)
+            s2 = jax.lax.dynamic_update_slice(s_, new_row[None, :], (i, 0))
+            s2 = jax.lax.dynamic_update_slice(s2, new_row[:, None], (0, i))
+            s2 = jax.lax.dynamic_update_slice(s2, dead[None, :], (j, 0))
+            s2 = jax.lax.dynamic_update_slice(s2, dead[:, None], (0, j))
+            return (s2, size.at[i].set(na + nb).at[j].set(0.0), alive2,
+                    chain, clen - 2, mi.at[t].set(i), mj.at[t].set(j),
+                    hh.at[t].set(prev_sim), t + 1, it + 1)
+
+        def extend(_):
+            return (s_, size, alive, chain.at[clen].set(nn), clen + 1,
+                    mi, mj, hh, t, it + 1)
+
+        return jax.lax.cond(do_merge, merge, extend, None)
+
+    init = (s,
+            jnp.where(alive0, 1.0, 0.0).astype(jnp.float32),
+            alive0,
+            jnp.zeros((np_pad + 1,), jnp.int32),
+            jnp.int32(0),
+            jnp.zeros((max(n - 1, 0),), jnp.int32),
+            jnp.zeros((max(n - 1, 0),), jnp.int32),
+            jnp.zeros((max(n - 1, 0),), jnp.float32),
+            jnp.int32(0), jnp.int32(0))
+    out = jax.lax.while_loop(cond, body, init)
+    _, _, _, _, _, mi, mj, hh, t, _ = out
+    return jnp.stack([mi, mj], axis=1), hh, t
+
+
+@partial(jax.jit, static_argnames=("n_leaves", "n_clusters"))
+def _cut_device(merge_rows, heights, *, n_leaves: int, n_clusters: int):
+    """Labels from chain-order merges: apply the ``N - T`` highest merges
+    as a union forest (dying row -> surviving row), resolve roots by
+    pointer jumping, and canonicalize labels by sorted root."""
+    keep = n_leaves - n_clusters
+    order = jnp.argsort(-heights, stable=True)
+    sel = order[:keep]
+    parent = jnp.arange(n_leaves, dtype=jnp.int32)
+    parent = parent.at[merge_rows[sel, 1]].set(merge_rows[sel, 0])
+    rounds = max(1, int(np.ceil(np.log2(max(n_leaves, 2)))))
+    parent = jax.lax.fori_loop(0, rounds, lambda _, p: p[p], parent)
+    _, labels = jnp.unique(parent, return_inverse=True, size=n_leaves,
+                           fill_value=n_leaves)
+    return labels.reshape(n_leaves).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Device spectral clustering (Ng-Jordan-Weiss on the affinity R)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("n_clusters", "n_init", "n_iter"))
+def _spectral_device(r, key, *, n_clusters: int, n_init: int = 8,
+                     n_iter: int = 50):
+    n = r.shape[0]
+    eye = jnp.eye(n, dtype=r.dtype)
+    a = r * (1.0 - eye)
+    deg = a.sum(axis=1)
+    d_inv_sqrt = 1.0 / jnp.sqrt(jnp.maximum(deg, 1e-12))
+    lap = eye - d_inv_sqrt[:, None] * a * d_inv_sqrt[None, :]
+    _, v = jnp.linalg.eigh(lap)
+    emb = v[:, :n_clusters]
+    emb = emb / jnp.maximum(jnp.linalg.norm(emb, axis=1, keepdims=True),
+                            1e-12)
+
+    def one_init(k):
+        idx = jax.random.choice(k, n, (n_clusters,), replace=False)
+        centers = emb[idx]
+
+        def lloyd(_, c):
+            d = ((emb[:, None, :] - c[None]) ** 2).sum(-1)
+            lab = d.argmin(1)
+            onehot = (lab[:, None] ==
+                      jnp.arange(n_clusters)[None]).astype(emb.dtype)
+            cnt = onehot.sum(0)
+            new_c = (onehot.T @ emb) / jnp.maximum(cnt, 1.0)[:, None]
+            return jnp.where(cnt[:, None] > 0, new_c, c)
+
+        centers = jax.lax.fori_loop(0, n_iter, lloyd, centers)
+        d = ((emb[:, None, :] - centers[None]) ** 2).sum(-1)
+        return d.argmin(1).astype(jnp.int32), d.min(1).sum()
+
+    labs, objs = jax.vmap(one_init)(jax.random.split(key, n_init))
+    return labs[jnp.argmin(objs)]
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+class ClusterEngine:
+    """One object that owns the GPS clustering decision (HAC + spectral).
+
+    ``cfg.backend`` selects host-numpy reference vs device NN-chain
+    (jnp / pallas inner step).  The device backends keep similarity,
+    dendrogram and labels on-device; value-level input validation (NaN,
+    asymmetry) lives on the numpy reference path where it is free —
+    device inputs get static shape checks only.
+    """
+
+    def __init__(self, cfg: ClusterConfig | None = None):
+        cfg = cfg or ClusterConfig()
+        if cfg.backend not in CLUSTER_BACKENDS:
+            raise ValueError(f"backend must be one of {CLUSTER_BACKENDS}, "
+                             f"got {cfg.backend!r}")
+        if cfg.linkage not in LINKAGES:
+            raise ValueError(f"linkage must be one of {LINKAGES}, "
+                             f"got {cfg.linkage!r}")
+        self.cfg = cfg
+
+    @property
+    def on_device(self) -> bool:
+        return self.cfg.backend != "numpy"
+
+    @staticmethod
+    def _check_square(s: jax.Array) -> int:
+        if s.ndim != 2 or s.shape[0] != s.shape[1]:
+            raise ValueError(f"similarity must be square, got {s.shape}")
+        return s.shape[0]
+
+    @staticmethod
+    def _check_n_clusters(n_clusters: int, n: int) -> None:
+        if not 1 <= n_clusters <= n:
+            raise ValueError(f"n_clusters must be in [1, {n}], "
+                             f"got {n_clusters}")
+
+    def _prepare(self, similarity) -> tuple[jax.Array, jax.Array, int]:
+        """Device linkage matrix: f32, diag ``-inf``, padded to a lane
+        multiple of 128 for the pallas inner step (dead rows/cols)."""
+        s = jnp.asarray(similarity, jnp.float32)
+        n = self._check_square(s)
+        pad = (-n) % 128 if self.cfg.backend == "pallas" else 0
+        full = (jnp.pad(s, ((0, pad), (0, pad)), constant_values=_NEG)
+                if pad else s)
+        idx = jnp.arange(n + pad)
+        full = full.at[idx, idx].set(_NEG)
+        alive = idx < n
+        return full, alive, n
+
+    # -- HAC ----------------------------------------------------------------
+
+    def hac(self, similarity) -> clu.Dendrogram | DeviceDendrogram:
+        """Agglomerative clustering -> dendrogram (host or device form)."""
+        if self.cfg.backend == "numpy":
+            return clu.hac(np.asarray(similarity), linkage=self.cfg.linkage)
+        s, alive, n = self._prepare(similarity)
+        merge_rows, heights, steps = _nn_chain(
+            s, alive, n=n, linkage=self.cfg.linkage,
+            impl="pallas" if self.cfg.backend == "pallas" else "jnp",
+            interpret=self.cfg.interpret)
+        # NaN/Inf in R breaks the chain's comparisons and the loop stops
+        # at the iteration cap with the merge buffers part-filled; the
+        # step count is the cheap completion witness (one scalar sync, no
+        # extra device work) so garbage never reaches the cut silently.
+        if int(steps) != n - 1:
+            raise ValueError(
+                f"device HAC stopped after {int(steps)}/{n - 1} merges — "
+                "the similarity matrix likely contains NaN/Inf (the numpy "
+                "backend validates values; device inputs are only "
+                "shape-checked)")
+        return DeviceDendrogram(n_leaves=n, merge_rows=merge_rows,
+                                heights=heights)
+
+    def cut(self, dend, n_clusters: int):
+        """Dendrogram -> labels; device dendrograms cut on-device."""
+        if isinstance(dend, clu.Dendrogram):
+            return clu.cut(dend, n_clusters)
+        self._check_n_clusters(n_clusters, dend.n_leaves)
+        return _cut_device(dend.merge_rows, dend.heights,
+                           n_leaves=dend.n_leaves, n_clusters=n_clusters)
+
+    def labels(self, similarity, n_clusters: int):
+        """HAC + cut.  numpy backend -> ``np.ndarray``; device backends ->
+        a ``jax.Array`` that never left the accelerator."""
+        return self.cut(self.hac(similarity), n_clusters)
+
+    # -- Spectral -----------------------------------------------------------
+
+    def spectral(self, similarity, n_clusters: int, rng=0):
+        """Normalized spectral clustering on the affinity ``R``.
+
+        numpy backend delegates to ``clustering.spectral_clusters``;
+        device backends run the same NJW pipeline (eigh + 8-init Lloyd)
+        jitted on-device (the pallas backend shares the jnp maths — the
+        hot spot here is ``eigh``, not a row kernel).  ``rng`` is a numpy
+        seed / Generator on the host path, an int seed or PRNG key on the
+        device path.
+        """
+        if self.cfg.backend == "numpy":
+            return clu.spectral_clusters(np.asarray(similarity), n_clusters,
+                                         rng=rng)
+        s = jnp.asarray(similarity, jnp.float32)
+        self._check_n_clusters(n_clusters, self._check_square(s))
+        key = rng if isinstance(rng, jax.Array) else jax.random.PRNGKey(
+            int(rng))
+        return _spectral_device(s, key, n_clusters=n_clusters)

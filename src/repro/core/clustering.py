@@ -55,6 +55,27 @@ class Dendrogram:
 _LINKAGES = ("average", "single", "complete")
 
 
+def _validate_similarity(similarity: np.ndarray) -> np.ndarray:
+    """Shared input validation -> float64 copy.
+
+    Garbage in (NaN from an upstream 0/0, a non-square or asymmetric
+    matrix) used to be silently merged into a nonsense dendrogram; now it
+    raises at the door.  Tiny float asymmetry from accumulation order is
+    tolerated (the protocol's ``symmetrize`` output is exactly symmetric,
+    but callers may hand-build matrices in float32).
+    """
+    s = np.array(similarity, dtype=np.float64, copy=True)
+    if s.ndim != 2 or s.shape[0] != s.shape[1]:
+        raise ValueError(f"similarity must be square, got {s.shape}")
+    if not np.isfinite(s).all():
+        raise ValueError("similarity contains NaN/Inf entries")
+    if not np.allclose(s, s.T, rtol=1e-5, atol=1e-6):
+        raise ValueError("similarity must be symmetric "
+                         "(max |R - R^T| = "
+                         f"{np.abs(s - s.T).max():.3g})")
+    return s
+
+
 def hac(similarity: np.ndarray, linkage: str = "average") -> Dendrogram:
     """Agglomerative clustering over a symmetric similarity matrix.
 
@@ -68,10 +89,8 @@ def hac(similarity: np.ndarray, linkage: str = "average") -> Dendrogram:
     """
     if linkage not in _LINKAGES:
         raise ValueError(f"linkage must be one of {_LINKAGES}, got {linkage!r}")
-    s = np.array(similarity, dtype=np.float64, copy=True)
+    s = _validate_similarity(similarity)
     n = s.shape[0]
-    if s.shape != (n, n):
-        raise ValueError(f"similarity must be square, got {s.shape}")
     # Active cluster bookkeeping. ``sim`` holds pairwise cluster linkage.
     sim = s.copy()
     np.fill_diagonal(sim, -np.inf)
@@ -192,7 +211,12 @@ def spectral_clusters(similarity: np.ndarray, n_clusters: int,
     normalisation, k-means (Lloyd, 50 iters, best of 8 inits).
     """
     rng = np.random.default_rng(rng) if isinstance(rng, int) else rng
-    a = np.array(similarity, dtype=np.float64, copy=True)
+    a = _validate_similarity(similarity)
+    if not 1 <= n_clusters <= a.shape[0]:
+        # otherwise this crashes opaquely inside rng.choice (or silently
+        # k-means-es more centers than points)
+        raise ValueError(f"n_clusters must be in [1, {a.shape[0]}], "
+                         f"got {n_clusters}")
     np.fill_diagonal(a, 0.0)
     deg = a.sum(axis=1)
     d_inv_sqrt = 1.0 / np.sqrt(np.maximum(deg, 1e-12))

@@ -1,10 +1,16 @@
 """One-shot clustering protocol (paper Algorithm 2).
 
-Ties together the ``ProtocolEngine`` (Eqs. 1-5, any backend) and
-``repro.core.clustering`` (HAC + cut) and tracks the communication ledger —
-the paper's headline claim is that the whole clustering costs each user one
-``(k x d)`` eigenvector upload + one ``(N,)`` relevance upload, before any
-training happens.
+Ties together the ``ProtocolEngine`` (Eqs. 1-5, any backend), the
+``ClusterEngine`` (HAC + cut, host reference or device NN-chain) and the
+communication ledger — the paper's headline claim is that the whole
+clustering costs each user one ``(k x d)`` eigenvector upload + one
+``(N,)`` relevance upload, before any training happens.
+
+With a device cluster backend (``ClusterConfig.backend`` "jnp"/"pallas")
+the similarity matrix ``R`` never leaves the accelerator: the protocol
+produces it on-device, the NN-chain HAC consumes it on-device, and the
+returned labels are a ``jax.Array`` ready for
+``fed.partition.stack_layout`` / ``fed.trainer.train_mthfl``.
 """
 from __future__ import annotations
 
@@ -16,51 +22,87 @@ import numpy as np
 
 from repro.core import clustering as clu
 from repro.core import similarity as sim
+from repro.core.cluster_engine import (ClusterConfig, ClusterEngine,
+                                       DeviceDendrogram)
 from repro.core.engine import ProtocolEngine
 
 __all__ = ["CommLedger", "OneShotResult", "one_shot_clustering"]
 
+_LEDGER_MODES = ("broadcast", "streaming")
+
 
 @dataclasses.dataclass(frozen=True)
 class CommLedger:
-    """Bytes moved by the clustering protocol (fp32 accounting).
+    """Bytes moved by the clustering protocol.
 
-    ``per_user_upload``: what one user sends (V_i broadcast + r row to GPS).
-    ``per_user_download``: what one user receives (all other users' V_j).
+    ``dtype_bytes`` parameterizes the wire precision (4 = fp32 default;
+    2 models an fp16/bf16 signature exchange).  ``mode`` selects the
+    exchange pattern the engine actually ran:
+
+    * ``"broadcast"`` — the paper's star topology: every user receives
+      each other user's ``V_j`` as a separate per-peer transfer, so the
+      per-user download is ``(N - 1) * k * d`` duplicated broadcasts.
+    * ``"streaming"`` — the blockwise engine mode: the GPS assembles the
+      signature table once and each user fetches the whole
+      ``O(N * d * k)`` table in one download (its own row rides along for
+      table alignment) instead of N - 1 per-peer duplicates.
+
+    ``per_user_upload``: what one user sends (V_i + its relevance row).
     ``gps_total``: what the GPS receives (N relevance rows).
-    ``iterative_equiv``: what ONE ROUND of weight-based iterative clustering
-    would upload per user, given a model of ``model_params`` weights — the
-    literature baseline the paper contrasts against (its Fig. 4 point).
+    ``iterative_equiv``: what ONE ROUND of weight-based iterative
+    clustering would upload per user for a ``model_params``-weight model —
+    the literature baseline the paper contrasts against (its Fig. 4
+    point).
     """
 
     n_users: int
     d: int
     top_k: int
     model_params: int = 0
+    dtype_bytes: int = 4
+    mode: str = "broadcast"
+
+    def __post_init__(self):
+        if self.mode not in _LEDGER_MODES:
+            raise ValueError(f"mode must be one of {_LEDGER_MODES}, "
+                             f"got {self.mode!r}")
+        if self.dtype_bytes <= 0:
+            raise ValueError(f"dtype_bytes must be positive, "
+                             f"got {self.dtype_bytes}")
+
+    @property
+    def signature_table_bytes(self) -> int:
+        """The assembled ``(N, d, k)`` signature table the GPS hosts."""
+        return self.dtype_bytes * self.n_users * self.top_k * self.d
 
     @property
     def per_user_upload(self) -> int:
-        return 4 * (self.top_k * self.d + self.n_users)
+        return self.dtype_bytes * (self.top_k * self.d + self.n_users)
 
     @property
     def per_user_download(self) -> int:
-        return 4 * (self.n_users - 1) * self.top_k * self.d
+        if self.mode == "streaming":
+            return self.signature_table_bytes
+        return self.dtype_bytes * (self.n_users - 1) * self.top_k * self.d
 
     @property
     def gps_total(self) -> int:
-        return 4 * self.n_users * self.n_users
+        return self.dtype_bytes * self.n_users * self.n_users
 
     @property
     def iterative_equiv(self) -> int:
-        return 4 * self.model_params
+        return self.dtype_bytes * self.model_params
 
     def summary(self) -> dict:
         return {
             "n_users": self.n_users,
             "d": self.d,
             "top_k": self.top_k,
+            "dtype_bytes": self.dtype_bytes,
+            "mode": self.mode,
             "per_user_upload_bytes": self.per_user_upload,
             "per_user_download_bytes": self.per_user_download,
+            "signature_table_bytes": self.signature_table_bytes,
             "gps_total_bytes": self.gps_total,
             "iterative_per_round_upload_bytes": self.iterative_equiv,
             "oneshot_vs_iterative_ratio": (
@@ -71,10 +113,14 @@ class CommLedger:
 
 @dataclasses.dataclass(frozen=True)
 class OneShotResult:
-    labels: np.ndarray            # (N,) cluster assignment in 0..T-1
-    similarity: np.ndarray        # (N, N) symmetrized R
-    relevance: np.ndarray         # (N, N) directed r(i, j)
-    dendrogram: clu.Dendrogram
+    """Labels + intermediates.  With a device cluster backend, ``labels``,
+    ``similarity`` and ``relevance`` are ``jax.Array``s that never left
+    the accelerator; the numpy backend returns host arrays."""
+
+    labels: np.ndarray | jax.Array          # (N,) cluster assignment 0..T-1
+    similarity: np.ndarray | jax.Array      # (N, N) symmetrized R
+    relevance: np.ndarray | jax.Array       # (N, N) directed r(i, j)
+    dendrogram: clu.Dendrogram | DeviceDendrogram
     ledger: CommLedger
 
 
@@ -84,23 +130,44 @@ def one_shot_clustering(features: Sequence[np.ndarray] | jax.Array,
                         linkage: str = "average",
                         model_params: int = 0,
                         n_valid: jax.Array | None = None,
-                        mesh=None) -> OneShotResult:
+                        mesh=None,
+                        cluster_cfg: ClusterConfig | None = None
+                        ) -> OneShotResult:
     """Run paper Algorithm 2 end-to-end on per-user feature matrices.
 
     ``features``: list of ``(n_i, d)`` arrays (or a padded ``(N, n, d)``
     array, with the true per-user counts in ``n_valid``).  The similarity
     backend — dense / blockwise-streaming / shard_map — is chosen by
-    ``cfg``; ``mesh`` is only consulted by the shard_map backend.  Returns
-    labels, the similarity matrix, and the comm ledger.
+    ``cfg``; ``mesh`` is only consulted by the shard_map backend.
+
+    ``cluster_cfg`` chooses the GPS decision layer: the default numpy
+    reference HAC, or the device NN-chain ("jnp" / "pallas") which keeps
+    ``R`` and the labels on-device.  ``linkage`` is honoured when
+    ``cluster_cfg`` is not given (back-compat); passing both with
+    conflicting linkages raises rather than silently preferring one.
     """
+    if (cluster_cfg is not None and linkage != "average"
+            and linkage != cluster_cfg.linkage):
+        raise ValueError(
+            f"conflicting linkages: linkage={linkage!r} vs "
+            f"cluster_cfg.linkage={cluster_cfg.linkage!r} — set it on "
+            "cluster_cfg only")
     engine = ProtocolEngine(cfg, mesh=mesh)
     res = engine.run(features, n_valid)
 
-    big_r_np = np.asarray(res.similarity)
-    dend = clu.hac(big_r_np, linkage=linkage)
-    labels = clu.cut(dend, n_clusters)
-    ledger = CommLedger(n_users=res.n_users, d=res.d, top_k=res.top_k,
-                        model_params=model_params)
-    return OneShotResult(labels=labels, similarity=big_r_np,
-                         relevance=np.asarray(res.relevance), dendrogram=dend,
+    ccfg = cluster_cfg or ClusterConfig(linkage=linkage)
+    cengine = ClusterEngine(ccfg)
+    if cengine.on_device:
+        big_r, relevance = res.similarity, res.relevance
+    else:
+        big_r, relevance = (np.asarray(res.similarity),
+                            np.asarray(res.relevance))
+    dend = cengine.hac(big_r)
+    labels = cengine.cut(dend, n_clusters)
+    ledger = CommLedger(
+        n_users=res.n_users, d=res.d, top_k=res.top_k,
+        model_params=model_params,
+        mode="streaming" if engine.cfg.block_users else "broadcast")
+    return OneShotResult(labels=labels, similarity=big_r,
+                         relevance=relevance, dendrogram=dend,
                          ledger=ledger)

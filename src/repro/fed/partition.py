@@ -9,11 +9,14 @@ from __future__ import annotations
 
 from typing import Any, Callable, Iterable, Mapping
 
+import jax
+import jax.numpy as jnp
+
 PyTree = Any
 PathPred = Callable[[tuple[str, ...]], bool]
 
 __all__ = ["tree_paths", "prefix_predicate", "split_params", "merge_params",
-           "tree_path_map"]
+           "tree_path_map", "stack_layout"]
 
 
 def tree_paths(tree: Mapping, prefix: tuple[str, ...] = ()) -> list[tuple[str, ...]]:
@@ -63,6 +66,41 @@ def tree_path_map(fn: Callable[[tuple[str, ...], Any], Any],
         out[k] = (tree_path_map(fn, v, p) if isinstance(v, Mapping)
                   else fn(p, v))
     return out
+
+
+def stack_layout(labels, n_clusters: int, c_max: int | None = None
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Membership layout of the ``(T, C_max, ...)`` super-stack from a
+    cluster assignment — computed with jnp so device labels straight from
+    the ``ClusterEngine`` cut never round-trip through host python loops.
+
+    ``labels (N,)`` ints -> ``(rows (N,) i32, slot (N,) i32, mask
+    (T, C_max) f32)``: ``slot[u]`` is user ``u``'s column inside its
+    cluster's row, preserving original user order (stable within each
+    cluster), and ``mask`` marks occupied slots.  Per-user payloads must
+    scatter through the SANITIZED row index, ``stack.at[rows, slot]
+    .set(values)``: out-of-range labels (including the ``-1`` unassigned
+    convention, which raw jnp indexing would wrap into cluster T-1) get
+    ``rows == n_clusters`` / ``slot == c_max``, which the scatter drops —
+    the same behaviour as the host loop's ``l == t`` membership test.
+    """
+    labels = jnp.asarray(labels, jnp.int32)
+    valid = (labels >= 0) & (labels < n_clusters)
+    onehot = labels[:, None] == jnp.arange(n_clusters, dtype=jnp.int32)[None]
+    slot = (jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1)[
+        jnp.arange(labels.shape[0]), jnp.clip(labels, 0, n_clusters - 1)]
+    largest = max(int(onehot.sum(axis=0).max()), 1)
+    if c_max is None:
+        c_max = largest
+    elif c_max < largest:
+        # an undersized stack would silently drop VALID users through the
+        # same out-of-bounds scatter that drops invalid labels
+        raise ValueError(f"c_max={c_max} < largest cluster size {largest}")
+    rows = jnp.where(valid, labels, n_clusters).astype(jnp.int32)
+    slot = jnp.where(valid, slot, c_max).astype(jnp.int32)
+    mask = jnp.zeros((n_clusters, c_max), jnp.float32)
+    mask = mask.at[rows, slot].set(1.0)
+    return rows, slot, mask
 
 
 def split_params(params: Mapping, is_common: PathPred

@@ -292,25 +292,33 @@ def _train_fused(users, labels, models, eval_sets, cfg: MTHFLConfig,
     n_max = max(1, max((int(u.n) for u in all_members), default=1))
     sample_shape = (all_members[0].x.shape[1:] if all_members else (1,))
 
+    # Membership layout of the super-stack comes from the label vector via
+    # jnp ops instead of host python loops (train_mthfl's entry asarray is
+    # the one remaining host sync — member bookkeeping needs it).  The
+    # slot order matches _setup_clusters' member lists (stable original
+    # user order), so the ragged x/y copies below land in the same cells.
+    labels_dev = jnp.asarray(labels, jnp.int32)
+    rows, slot, mask = part.stack_layout(labels_dev, n_clusters, c_max)
+    uid_all = jnp.asarray([int(u.user_id) for u in users], jnp.int32)
+    n_all = jnp.asarray([float(u.n) for u in users], jnp.float32)
+    uid_stack = jnp.zeros((n_clusters, c_max), jnp.int32
+                          ).at[rows, slot].set(uid_all)
+    n_stack = jnp.ones((n_clusters, c_max), jnp.float32  # pads: n=1, masked
+                       ).at[rows, slot].set(n_all)
+
     x_np = np.zeros((n_clusters, c_max, n_max) + tuple(sample_shape),
                     np.float32)
     y_np = np.zeros((n_clusters, c_max, n_max), np.int32)
-    n_np = np.ones((n_clusters, c_max), np.float32)   # pads: n=1, masked out
-    uid_np = np.zeros((n_clusters, c_max), np.int32)
-    mask_np = np.zeros((n_clusters, c_max), np.float32)
     for t in range(n_clusters):
-        for c, ((x, y), uid, n) in enumerate(zip(
-                setup.datasets[t], setup.uids[t], setup.n_samples[t])):
+        for c, ((x, y), n) in enumerate(zip(setup.datasets[t],
+                                            setup.n_samples[t])):
             x_np[t, c, :n] = x
             y_np[t, c, :n] = y
-            n_np[t, c] = n
-            uid_np[t, c] = uid
-            mask_np[t, c] = 1.0
 
     p_stack = jax.tree.map(lambda *ls: jnp.stack(ls), *lps_params)
     data = dict(x=jnp.asarray(x_np), y=jnp.asarray(y_np),
-                n_per=jnp.asarray(n_np), uids=jnp.asarray(uid_np),
-                mask=jnp.asarray(mask_np),
+                n_per=n_stack, uids=uid_stack,
+                mask=mask,
                 dkeys=jnp.stack(setup.data_keys),
                 cluster_w=jnp.asarray(setup.cluster_weights, jnp.float32))
     statics = dict(loss_fn=models[0].loss_fn,
@@ -445,6 +453,10 @@ def train_mthfl(users: Sequence,                      # list[UserData-like]
     cluster the user is ASSIGNED to (misassigned users under random
     clustering train with the wrong head, which is exactly the degradation
     the paper measures).
+    ``labels`` may be a host sequence or a device ``jax.Array`` straight
+    from the ``ClusterEngine`` cut — the fused path derives the
+    super-stack membership layout from it via ``partition.stack_layout``
+    (one host sync remains for the ragged per-user data copies).
     ``models[t]`` / ``eval_sets[t]``: per-cluster model bundle and held-out
     (x, y_local) test set.
 

@@ -1,0 +1,2 @@
+from repro.kernels.linkage.ops import linkage_step
+from repro.kernels.linkage.ref import linkage_step_ref, lance_williams

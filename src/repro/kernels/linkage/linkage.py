@@ -1,0 +1,103 @@
+"""Fused Lance-Williams row-update + masked-argmax Pallas kernel.
+
+The NN-chain HAC inner loop is memory-bound: each step reads two
+``(N,)`` linkage rows, writes one combined row, and immediately needs
+that row's masked argmax.  Done naively that is three passes over the
+row; this kernel does all of it in one sweep of column tiles:
+
+grid = (n / block,): each step loads one ``(1, block)`` tile of the two
+source rows and the mask, computes the Lance-Williams combination on the
+VPU, writes the updated tile, and folds the tile's max/argmax into a
+running best kept in SMEM.  The final step flushes the winning
+``(value, index)`` pair — the row never revisits HBM for the reduction.
+
+Tie-breaking matches ``jnp.argmax`` (first index wins): within a tile the
+argmax picks the smallest column, and across tiles only a strictly
+greater max displaces the running best.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.linkage.ref import LINKAGES
+
+
+def _kernel(na_ref, nb_ref, a_ref, b_ref, m_ref, row_ref, val_ref, idx_ref,
+            bval_ref, bidx_ref, *, linkage: str, n_steps: int, block: int):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        bval_ref[0] = -jnp.inf
+        bidx_ref[0] = 0
+
+    a = a_ref[...]                                     # (1, block)
+    b = b_ref[...]
+    if linkage == "average":
+        na, nb = na_ref[0], nb_ref[0]
+        new = (na * a + nb * b) / (na + nb)
+    elif linkage == "single":
+        new = jnp.maximum(a, b)
+    else:  # complete
+        new = jnp.minimum(a, b)
+    new = jnp.where(m_ref[...] > 0.5, new, -jnp.inf)
+    row_ref[...] = new
+
+    tile_max = jnp.max(new)
+    cols = jax.lax.broadcasted_iota(jnp.int32, new.shape, 1)
+    tile_arg = jnp.min(jnp.where(new == tile_max, cols, block))
+
+    @pl.when(tile_max > bval_ref[0])
+    def _update():
+        bval_ref[0] = tile_max
+        bidx_ref[0] = tile_arg + t * block
+
+    @pl.when(t == n_steps - 1)
+    def _flush():
+        val_ref[0] = bval_ref[0]
+        idx_ref[0] = bidx_ref[0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("linkage", "block", "interpret"))
+def linkage_step_pallas(row_a: jax.Array, row_b: jax.Array,
+                        size_a: jax.Array, size_b: jax.Array,
+                        mask: jax.Array, linkage: str = "average",
+                        block: int = 512, interpret: bool = True
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """``row_a/row_b/mask (n,)`` -> ``(new_row (n,), argmax, max)``.
+
+    ``n`` must be a multiple of ``block`` (itself a lane multiple of 128);
+    ``ops.py`` pads.  ``mask`` is float (1.0 keep / 0.0 drop); sizes ride
+    in SMEM as ``(1,)`` scalars.
+    """
+    if linkage not in LINKAGES:
+        raise ValueError(f"linkage must be one of {LINKAGES}, got {linkage!r}")
+    n = row_a.shape[-1]
+    if n % block or block % 128:
+        raise ValueError(f"n={n} must be a multiple of block={block} "
+                         f"(a lane multiple of 128)")
+    grid = (n // block,)
+    scalar_spec = pl.BlockSpec(memory_space=pltpu.SMEM)
+    row_spec = pl.BlockSpec((1, block), lambda t: (0, t))
+    new_row, val, idx = pl.pallas_call(
+        functools.partial(_kernel, linkage=linkage, n_steps=grid[0],
+                          block=block),
+        grid=grid,
+        in_specs=[scalar_spec, scalar_spec, row_spec, row_spec, row_spec],
+        out_specs=(row_spec, scalar_spec, scalar_spec),
+        out_shape=(jax.ShapeDtypeStruct((1, n), jnp.float32),
+                   jax.ShapeDtypeStruct((1,), jnp.float32),
+                   jax.ShapeDtypeStruct((1,), jnp.int32)),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.float32),
+                        pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(jnp.asarray(size_a, jnp.float32).reshape(1),
+      jnp.asarray(size_b, jnp.float32).reshape(1),
+      row_a.reshape(1, n), row_b.reshape(1, n), mask.reshape(1, n))
+    return new_row[0], idx[0], val[0]

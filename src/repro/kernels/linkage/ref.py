@@ -1,0 +1,56 @@
+"""jnp oracle for the fused HAC linkage-step kernel.
+
+One NN-chain inner step over a similarity-linkage matrix does two things
+to a single row: a Lance-Williams combination of the two merging
+clusters' rows, and a masked argmax of the result (the merged cluster's
+nearest neighbour / the chain-extension target).  Fusing them means the
+updated row is consumed for its argmax while still in registers instead
+of round-tripping through memory twice.
+
+Similarity semantics (higher = closer), so linkages are mirrored:
+
+  average : (na * a + nb * b) / (na + nb)      (UPGMA, convex combination)
+  single  : max(a, b)                          (closest members)
+  complete: min(a, b)                          (farthest members)
+
+Passing the SAME row for ``a`` and ``b`` makes the update an identity for
+every linkage, which is how the chain-extension step reuses this kernel
+as a pure masked argmax.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LINKAGES = ("average", "single", "complete")
+
+
+def lance_williams(row_a: jax.Array, row_b: jax.Array, size_a: jax.Array,
+                   size_b: jax.Array, linkage: str) -> jax.Array:
+    """Combine two clusters' linkage rows (similarity semantics)."""
+    if linkage == "average":
+        return (size_a * row_a + size_b * row_b) / (size_a + size_b)
+    if linkage == "single":
+        return jnp.maximum(row_a, row_b)
+    if linkage == "complete":
+        return jnp.minimum(row_a, row_b)
+    raise ValueError(f"linkage must be one of {LINKAGES}, got {linkage!r}")
+
+
+def linkage_step_ref(row_a: jax.Array, row_b: jax.Array,
+                     size_a: jax.Array, size_b: jax.Array,
+                     mask: jax.Array, linkage: str = "average"
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """``(new_row, argmax, max)`` of the masked Lance-Williams update.
+
+    ``row_a``/``row_b`` ``(n,)`` f32, ``size_a``/``size_b`` scalars,
+    ``mask (n,)`` bool (False entries become ``-inf`` and can never win
+    the argmax).  Ties resolve to the smallest index, matching
+    ``jnp.argmax``.
+    """
+    new = lance_williams(row_a, row_b,
+                         jnp.asarray(size_a, row_a.dtype),
+                         jnp.asarray(size_b, row_a.dtype), linkage)
+    new = jnp.where(mask, new, -jnp.inf)
+    idx = jnp.argmax(new).astype(jnp.int32)
+    return new, idx, new[idx]

@@ -35,6 +35,12 @@ def main() -> None:
     ap.add_argument("--top-k", type=int, default=8)
     ap.add_argument("--backend", default="jnp",
                     choices=["jnp", "pallas", "shard_map"])
+    ap.add_argument("--cluster-backend", default="numpy",
+                    choices=["numpy", "jnp", "pallas"],
+                    help="GPS decision layer: host reference HAC or the "
+                         "device NN-chain (keeps R on-device)")
+    ap.add_argument("--linkage", default="average",
+                    choices=["average", "single", "complete"])
     ap.add_argument("--block-users", type=int, default=0,
                     help="> 0 enables blockwise streaming (single host)")
     ap.add_argument("--devices", type=int, default=0,
@@ -52,6 +58,7 @@ def main() -> None:
 
     from repro.core import clustering as clu
     from repro.core import oneshot
+    from repro.core.cluster_engine import ClusterConfig
     from repro.core.similarity import SimilarityConfig
     from repro.data import synthetic as syn
 
@@ -59,16 +66,20 @@ def main() -> None:
         args.users, args.samples, args.dim, args.tasks, seed=args.seed)
     cfg = SimilarityConfig(top_k=args.top_k, backend=args.backend,
                            block_users=args.block_users)
+    ccfg = ClusterConfig(backend=args.cluster_backend, linkage=args.linkage)
     print(f"{args.users} users x {args.samples} samples x d={args.dim}, "
           f"{args.tasks} tasks | backend={args.backend} "
+          f"cluster_backend={args.cluster_backend} "
           f"block_users={args.block_users} devices={len(jax.devices())}")
 
     t0 = time.time()
     res = oneshot.one_shot_clustering(jax.numpy.asarray(feats),
-                                      n_clusters=args.tasks, cfg=cfg)
+                                      n_clusters=args.tasks, cfg=cfg,
+                                      cluster_cfg=ccfg)
+    labels = np.asarray(res.labels)           # host sync for reporting only
     dt = time.time() - t0
-    acc = clu.clustering_accuracy(res.labels, task_ids)
-    sizes = np.bincount(res.labels, minlength=args.tasks)
+    acc = clu.clustering_accuracy(labels, task_ids)
+    sizes = np.bincount(labels, minlength=args.tasks)
     print(f"protocol + HAC: {dt:.2f}s | clustering accuracy {acc:.1%} | "
           f"cluster sizes {sizes.tolist()}")
     led = res.ledger.summary()

@@ -1,0 +1,297 @@
+"""ClusterEngine: device NN-chain HAC == numpy reference (paper §II-C).
+
+The GPS decision layer must produce the SAME dendrogram cut whether it
+runs the host reference (greedy full-matrix argmax) or the device
+NN-chain ``lax.while_loop`` (jnp / pallas fused inner step) — up to
+cluster relabelling and tie order.  Also guards the dendrogram
+invariants the §II-C cut relies on: monotone heights per linkage, cut
+edge cases, tie-order determinism, and the input validation added to
+``core/clustering.py``.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import clustering as clu
+from repro.core import oneshot
+from repro.core.cluster_engine import (CLUSTER_BACKENDS, ClusterConfig,
+                                       ClusterEngine, DeviceDendrogram)
+from repro.core.similarity import SimilarityConfig
+
+LINKAGES = ("average", "single", "complete")
+
+
+def rand_sim(n, seed):
+    rng = np.random.default_rng(seed)
+    r = rng.uniform(0, 1, (n, n))
+    r = (r + r.T) / 2
+    np.fill_diagonal(r, 1.0)
+    return r
+
+
+def block_sim(sizes, seed=0, noise=0.02):
+    rng = np.random.default_rng(seed)
+    n = sum(sizes)
+    lab = np.repeat(np.arange(len(sizes)), sizes)
+    r = np.where(lab[:, None] == lab[None, :], 0.9, 0.2)
+    r = r + rng.uniform(-noise, noise, size=(n, n))
+    r = (r + r.T) / 2
+    np.fill_diagonal(r, 1.0)
+    return r, lab
+
+
+def same_partition(a, b):
+    return clu.adjusted_rand_index(np.asarray(a), np.asarray(b)) == \
+        pytest.approx(1.0)
+
+
+class TestDeviceParity:
+    """jnp / pallas NN-chain labels == numpy greedy HAC labels."""
+
+    @pytest.mark.parametrize("linkage", LINKAGES)
+    @given(n=st.integers(4, 24), seed=st.integers(0, 3))
+    @settings(max_examples=8, deadline=None)
+    def test_jnp_matches_numpy_random(self, linkage, n, seed):
+        r = rand_sim(n, seed)
+        for t in (1, 2, max(2, n // 3), n):
+            ref = clu.hac_clusters(r, t, linkage)
+            dev = ClusterEngine(ClusterConfig(
+                backend="jnp", linkage=linkage)).labels(r, t)
+            assert isinstance(dev, jax.Array)
+            assert same_partition(dev, ref), (linkage, n, seed, t)
+
+    @pytest.mark.parametrize("linkage", LINKAGES)
+    def test_pallas_matches_numpy(self, linkage):
+        r = rand_sim(17, 2)
+        ref = clu.hac_clusters(r, 3, linkage)
+        dev = ClusterEngine(ClusterConfig(
+            backend="pallas", linkage=linkage)).labels(r, 3)
+        assert same_partition(dev, ref)
+
+    def test_parity_on_tied_matrix(self):
+        """Exact ties everywhere inside/across blocks: any tie order must
+        still cut into the block partition."""
+        r, true = block_sim([4, 4, 3], noise=0.0)
+        for backend in ("jnp", "pallas"):
+            dev = ClusterEngine(ClusterConfig(backend=backend)).labels(r, 3)
+            assert same_partition(dev, true)
+
+    def test_parity_on_ragged_protocol_output(self):
+        """End-to-end through the ProtocolEngine on RAGGED per-user
+        features (pad_ragged path): numpy and jnp cluster backends agree
+        on the labels of the real (unpadded) users."""
+        rng = np.random.default_rng(0)
+        base = [rng.standard_normal((8, 8)) @ rng.standard_normal((8, 16))
+                for _ in range(3)]
+        feats = [np.asarray(base[i % 3][: 5 + (i % 4)] +
+                            0.05 * rng.standard_normal((5 + (i % 4), 16)),
+                            np.float32)
+                 for i in range(9)]
+        res_np = oneshot.one_shot_clustering(
+            feats, 3, cfg=SimilarityConfig(top_k=4),
+            cluster_cfg=ClusterConfig(backend="numpy"))
+        res_dev = oneshot.one_shot_clustering(
+            feats, 3, cfg=SimilarityConfig(top_k=4),
+            cluster_cfg=ClusterConfig(backend="jnp"))
+        assert isinstance(res_dev.labels, jax.Array)
+        assert same_partition(res_dev.labels, res_np.labels)
+
+    def test_device_labels_stay_on_device(self):
+        """The jnp backend's R, dendrogram and labels are jax arrays —
+        no host round-trip between protocol and trainer."""
+        rng = np.random.default_rng(1)
+        feats = jnp.asarray(rng.standard_normal((6, 10, 8)), jnp.float32)
+        res = oneshot.one_shot_clustering(
+            feats, 2, cfg=SimilarityConfig(top_k=4),
+            cluster_cfg=ClusterConfig(backend="jnp"))
+        assert isinstance(res.similarity, jax.Array)
+        assert isinstance(res.labels, jax.Array)
+        assert isinstance(res.dendrogram, DeviceDendrogram)
+
+
+class TestDendrogramInvariants:
+    @pytest.mark.parametrize("linkage", LINKAGES)
+    def test_heights_monotone_numpy(self, linkage):
+        r = rand_sim(20, 4)
+        h = clu.hac(r, linkage).heights()
+        assert np.all(np.diff(h) <= 1e-9), linkage
+
+    @pytest.mark.parametrize("linkage", LINKAGES)
+    def test_device_to_host_heights_match_greedy(self, linkage):
+        r = rand_sim(18, 5)
+        ref = clu.hac(r, linkage)
+        dd = ClusterEngine(ClusterConfig(backend="jnp",
+                                         linkage=linkage)).hac(r)
+        host = dd.to_host()
+        assert np.all(np.diff(host.heights()) <= 1e-6)
+        assert np.allclose(np.sort(host.heights()),
+                           np.sort(ref.heights()), atol=1e-5)
+
+    @pytest.mark.parametrize("backend", ["numpy", "jnp"])
+    def test_cut_extremes(self, backend):
+        r = rand_sim(9, 0)
+        eng = ClusterEngine(ClusterConfig(backend=backend))
+        ones = np.asarray(eng.labels(r, 1))
+        assert len(np.unique(ones)) == 1
+        singletons = np.asarray(eng.labels(r, 9))
+        assert len(np.unique(singletons)) == 9
+
+    def test_cut_label_range(self):
+        r = rand_sim(11, 3)
+        for t in range(1, 12):
+            lab = np.asarray(
+                ClusterEngine(ClusterConfig(backend="jnp")).labels(r, t))
+            assert lab.shape == (11,)
+            assert set(np.unique(lab)) == set(range(t))
+
+    def test_tie_order_determinism(self):
+        """Same tied input twice -> bitwise-identical labels, host and
+        device (no RNG, stable argmax/argsort tie-breaks)."""
+        r, _ = block_sim([5, 5], noise=0.0)
+        assert (clu.hac_clusters(r, 2) == clu.hac_clusters(r, 2)).all()
+        eng = ClusterEngine(ClusterConfig(backend="jnp"))
+        a = np.asarray(eng.labels(r, 2))
+        b = np.asarray(eng.labels(r, 2))
+        assert (a == b).all()
+
+    def test_device_cut_out_of_range_raises(self):
+        eng = ClusterEngine(ClusterConfig(backend="jnp"))
+        dend = eng.hac(rand_sim(6, 0))
+        with pytest.raises(ValueError, match="n_clusters"):
+            eng.cut(dend, 0)
+        with pytest.raises(ValueError, match="n_clusters"):
+            eng.cut(dend, 7)
+
+
+class TestValidation:
+    def test_bad_backend_raises(self):
+        with pytest.raises(ValueError, match="backend"):
+            ClusterEngine(ClusterConfig(backend="torch"))
+
+    def test_bad_linkage_raises(self):
+        with pytest.raises(ValueError, match="linkage"):
+            ClusterEngine(ClusterConfig(linkage="ward"))
+
+    def test_hac_rejects_nan(self):
+        r = rand_sim(6, 0)
+        r[2, 3] = r[3, 2] = np.nan
+        with pytest.raises(ValueError, match="NaN"):
+            clu.hac(r)
+
+    def test_hac_rejects_non_square(self):
+        with pytest.raises(ValueError, match="square"):
+            clu.hac(np.ones((4, 5)))
+
+    def test_hac_rejects_asymmetric(self):
+        r = rand_sim(6, 0)
+        r[1, 4] += 0.5
+        with pytest.raises(ValueError, match="symmetric"):
+            clu.hac(r)
+
+    def test_conflicting_linkage_args_raise(self):
+        rng = np.random.default_rng(0)
+        feats = jnp.asarray(rng.standard_normal((4, 6, 8)), jnp.float32)
+        with pytest.raises(ValueError, match="conflicting linkages"):
+            oneshot.one_shot_clustering(
+                feats, 2, cfg=SimilarityConfig(top_k=4), linkage="single",
+                cluster_cfg=ClusterConfig(backend="jnp"))
+
+    def test_spectral_rejects_bad_n_clusters(self):
+        r = rand_sim(6, 0)
+        with pytest.raises(ValueError, match="n_clusters"):
+            clu.spectral_clusters(r, 0)
+        with pytest.raises(ValueError, match="n_clusters"):
+            clu.spectral_clusters(r, 7)
+
+    def test_engine_rejects_non_square_device(self):
+        eng = ClusterEngine(ClusterConfig(backend="jnp"))
+        with pytest.raises(ValueError, match="square"):
+            eng.hac(np.ones((4, 5), np.float32))
+
+    def test_device_hac_rejects_nan_via_step_count(self):
+        """The device path skips value validation, but NaN stalls the
+        NN-chain and the completion check must turn that into an error
+        instead of a silently truncated dendrogram."""
+        r = rand_sim(8, 0)
+        r[2, 5] = r[5, 2] = np.nan
+        eng = ClusterEngine(ClusterConfig(backend="jnp"))
+        with pytest.raises(ValueError, match="NaN"):
+            eng.hac(r)
+
+
+class TestSpectralBackend:
+    def test_jnp_spectral_recovers_blocks(self):
+        r, true = block_sim([6, 6], seed=5)
+        lab = ClusterEngine(ClusterConfig(backend="jnp")).spectral(r, 2,
+                                                                   rng=0)
+        assert isinstance(lab, jax.Array)
+        assert same_partition(lab, true)
+
+    def test_jnp_spectral_deterministic(self):
+        r, _ = block_sim([5, 4, 3], seed=2)
+        eng = ClusterEngine(ClusterConfig(backend="jnp"))
+        a = np.asarray(eng.spectral(r, 3, rng=7))
+        b = np.asarray(eng.spectral(r, 3, rng=7))
+        assert (a == b).all()
+
+    def test_numpy_backend_delegates(self):
+        r, true = block_sim([6, 6], seed=5)
+        lab = ClusterEngine(ClusterConfig(backend="numpy")).spectral(
+            r, 2, rng=0)
+        assert isinstance(lab, np.ndarray)
+        assert same_partition(lab, true)
+
+    def test_jnp_spectral_validates(self):
+        eng = ClusterEngine(ClusterConfig(backend="jnp"))
+        with pytest.raises(ValueError, match="n_clusters"):
+            eng.spectral(rand_sim(5, 0), 9)
+
+
+class TestTrainerConsumesDeviceLabels:
+    def test_stack_layout_matches_host_loop(self):
+        from repro.fed import partition as fpart
+
+        labels = jnp.asarray([0, 2, 1, 0, 2, 2, 0], jnp.int32)
+        rows, slot, mask = fpart.stack_layout(labels, 3)
+        slot = np.asarray(slot)
+        mask = np.asarray(mask)
+        assert np.asarray(rows).tolist() == labels.tolist()
+        # original user order preserved inside each cluster row
+        assert slot.tolist() == [0, 0, 0, 1, 1, 2, 2]
+        assert mask.shape == (3, 3)
+        assert mask.sum() == 7
+        assert (mask[0] == [1, 1, 1]).all()
+        assert (mask[1] == [1, 0, 0]).all()
+
+    def test_stack_layout_empty_cluster(self):
+        from repro.fed import partition as fpart
+
+        _, _, mask = fpart.stack_layout(jnp.asarray([0, 0, 2]), 3)
+        assert np.asarray(mask)[1].sum() == 0
+
+    def test_stack_layout_rejects_undersized_c_max(self):
+        from repro.fed import partition as fpart
+
+        with pytest.raises(ValueError, match="c_max"):
+            fpart.stack_layout(jnp.asarray([0, 0, 0, 1]), 2, c_max=2)
+
+    def test_stack_layout_drops_out_of_range_labels(self):
+        """-1 (unassigned) and >= T labels must be dropped, not wrapped
+        into cluster T-1 by jnp's negative indexing."""
+        from repro.fed import partition as fpart
+
+        labels = jnp.asarray([0, -1, 2, 0, 2, 3], jnp.int32)
+        rows, slot, mask = fpart.stack_layout(labels, 3)
+        mask = np.asarray(mask)
+        assert mask.sum() == 4                      # only the valid four
+        assert (mask[2] == [1, 1]).all()            # cluster 2 intact
+        # scattering payloads through (rows, slot) drops the invalid users
+        vals = jnp.zeros((3, mask.shape[1]), jnp.int32).at[rows, slot].set(
+            jnp.asarray([10, 11, 12, 13, 14, 15], jnp.int32))
+        assert np.asarray(vals)[2].tolist() == [12, 14]
+
+    def test_backends_available(self):
+        assert CLUSTER_BACKENDS == ("numpy", "jnp", "pallas")
