@@ -1,0 +1,135 @@
+"""End-to-end pipeline benchmark: RAW user shards -> cluster labels.
+
+The full Algorithm-2 wall-clock, both ways:
+
+  host_ingest    numpy Phi per user -> padded feature stack ->
+                 ProtocolEngine (dense jnp) -> host numpy HAC
+  raw_dense      one_shot_clustering raw entry point, one-pass device
+                 featurize, subspace top-k, device NN-chain HAC
+  raw_stream     same, row-chunk streaming Gram accumulation
+  raw_pallas     same, fused kernels/featurize_gram chunks (bf16)
+
+Every device point asserts LABEL PARITY against the host path (ARI == 1
+up to relabelling) and perfect task recovery, so the speedup is measured
+at equal answer quality.  Wall-clock includes everything from raw numpy
+shards to labels on the host.
+
+Standalone: ``PYTHONPATH=src:. python benchmarks/bench_pipeline.py``
+(CI smoke: ``--quick``).  Results recorded via ``--json``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import clustering as clu
+from repro.core import oneshot
+from repro.core.cluster_engine import ClusterConfig
+from repro.core.engine import ProtocolEngine
+from repro.core.signature_engine import SignatureConfig
+from repro.core.similarity import SimilarityConfig
+from repro.data import features as feat
+from repro.data import synthetic as syn
+
+TOP_K = 8
+
+
+def host_pipeline(raw: np.ndarray, fc: feat.FeatureConfig, n_tasks: int
+                  ) -> np.ndarray:
+    """Seed-era path: host featurize loop + dense protocol + host HAC."""
+    feats = np.stack([feat.feature_map(raw[i], fc)
+                      for i in range(raw.shape[0])])
+    cfg = SimilarityConfig(top_k=TOP_K)
+    big_r = np.asarray(ProtocolEngine(cfg).similarity(feats))
+    return clu.hac_clusters(big_r, n_tasks)
+
+
+def bench_point(n_users: int, n: int, m: int, d: int, n_tasks: int,
+                chunk: int, run_pallas: bool) -> tuple[list[str], dict]:
+    raw, task_ids = syn.make_task_feature_mixture(n_users, n, m, n_tasks,
+                                                  seed=0)
+    fc = feat.FeatureConfig(kind="random_projection", d=d)
+
+    labels_host = host_pipeline(raw, fc, n_tasks)      # warm engine jit
+    t0 = time.perf_counter()
+    labels_host = host_pipeline(raw, fc, n_tasks)
+    t_host = time.perf_counter() - t0
+    assert clu.clustering_accuracy(labels_host, task_ids) == 1.0
+
+    modes = [
+        ("raw_dense", SignatureConfig()),
+        ("raw_stream", SignatureConfig(chunk_rows=chunk)),
+    ]
+    if run_pallas:
+        # Off-TPU the kernel executes in interpret mode, which times the
+        # interpreter rather than the kernel — keep it to the small point
+        # (parity still asserted), like bench_clustering's pallas cap.
+        modes.append(("raw_pallas",
+                      SignatureConfig(backend="pallas", chunk_rows=chunk,
+                                      compute_dtype="bf16")))
+    rows, recs = [], []
+    for name, sig_cfg in modes:
+        sim_backend = "pallas" if sig_cfg.backend == "pallas" else "jnp"
+
+        def run_once():
+            res = oneshot.one_shot_clustering(
+                raw, n_clusters=n_tasks,
+                cfg=SimilarityConfig(top_k=TOP_K, backend=sim_backend),
+                cluster_cfg=ClusterConfig(backend="jnp"),
+                feature_cfg=fc, signature_cfg=sig_cfg)
+            return np.asarray(res.labels)
+
+        labels = run_once()                                   # compile
+        t0 = time.perf_counter()
+        labels = run_once()
+        dt = time.perf_counter() - t0
+        ari = float(clu.adjusted_rand_index(labels, labels_host))
+        assert ari == 1.0, (
+            f"{name} label parity broken at N={n_users}: ARI={ari}")
+        rec = {"mode": name, "seconds": round(dt, 4),
+               "speedup_vs_host": round(t_host / dt, 2), "parity": True}
+        recs.append(rec)
+        rows.append(common.row(
+            f"pipeline_{name}_N{n_users}", dt * 1e6,
+            host_us=round(t_host * 1e6, 1),
+            speedup_vs_host=rec["speedup_vs_host"], parity=True))
+    record = {"N": n_users, "n": n, "m": m, "d": d, "tasks": n_tasks,
+              "chunk_rows": chunk, "host_s": round(t_host, 4),
+              "modes": recs}
+    return rows, record
+
+
+def run(quick: bool = False, json_path: str | None = None) -> list[str]:
+    on_tpu = jax.default_backend() == "tpu"
+    if quick:
+        points = [(48, 48, 96, 32, 4, 16, True)]
+    else:
+        points = [(64, 64, 128, 64, 4, 32, True),
+                  (256, 128, 512, 128, 8, 64, on_tpu)]
+    rows, records = [], []
+    for point in points:
+        r, rec = bench_point(*point)
+        rows.extend(r)
+        records.append(rec)
+        jax.clear_caches()
+    payload = {"quick": quick, "backend": jax.default_backend(),
+               "grid": records}
+    if json_path:
+        common.record_result(json_path, payload)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: small point, same code paths")
+    ap.add_argument("--json",
+                    default="benchmarks/results/bench_pipeline.json",
+                    help="where to record the wall-clock grid")
+    args = ap.parse_args()
+    for r in run(quick=args.quick, json_path=args.json):
+        print(r, flush=True)

@@ -1,0 +1,255 @@
+"""Signature-stage benchmark: host-numpy ingest vs the SignatureEngine.
+
+The seed pipeline STARTED on the host: per-user numpy ``feature_map``,
+the materialized feature stack, and a full ``np.linalg.eigh`` (O(d^3))
+per user for signatures that keep only ``top_k ~ 8`` eigenpairs.  The
+``SignatureEngine`` runs the same raw -> (lam, V) stage device-resident:
+jit-able Phi vmapped over users, optional row-chunk streaming with online
+Gram accumulation (peak working set independent of n), and a batched
+top-k subspace iteration (O(d^2 k iters)) instead of the eigh.
+
+Modes timed (every point asserts top-k eigenvalue parity vs the host
+reference):
+
+  host           per-user numpy Phi + Gram + full eigh  (the seed path)
+  jnp_dense      one-pass device featurize + Gram + subspace top-k
+  jnp_stream     row-chunk streaming accumulation, same spectrum stage
+  pallas_stream  fused kernels/featurize_gram chunks, bf16 compute
+
+Acceptance (ISSUE 4): >= 5x end-to-end signature-stage speedup vs the
+host-numpy path at N=512, d=256 on CPU, recorded in ``--json``, with
+streaming peak memory independent of n (asserted analytically and
+demonstrated by running the streaming mode at n and 2n).
+
+Standalone: ``PYTHONPATH=src:. python benchmarks/bench_signature.py``
+(CI smoke: ``--quick``, small grid, same code paths + assertions).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core.signature_engine import SignatureConfig, SignatureEngine
+from repro.data import features as feat
+from repro.data import synthetic as syn
+
+TOP_K = 8
+N_TASKS = 8
+
+
+def host_ingest(raw: np.ndarray, fc: feat.FeatureConfig, top_k: int
+                ) -> tuple[np.ndarray, np.ndarray]:
+    """The seed path: numpy Phi per user, full eigh, keep top-k."""
+    n_users = raw.shape[0]
+    f0 = feat.feature_map(raw[0], fc)
+    d = f0.shape[1]
+    lams = np.empty((n_users, top_k), np.float32)
+    vs = np.empty((n_users, d, top_k), np.float32)
+    for i in range(n_users):
+        f = feat.feature_map(raw[i], fc)
+        g = f.T @ f / np.float32(f.shape[0])
+        lam, v = np.linalg.eigh(g)
+        lams[i] = lam[::-1][:top_k]
+        vs[i] = v[:, ::-1][:, :top_k]
+    return lams, vs
+
+
+def stream_peak_bytes(n_users: int, chunk: int, m: int, d: int) -> int:
+    """Streaming device working set: one raw chunk + the Gram stack + Phi
+    params — NO term in n, which is the point."""
+    return 4 * (n_users * chunk * m + n_users * d * d + m * d)
+
+
+def dense_peak_bytes(n_users: int, n: int, m: int, d: int) -> int:
+    """Dense working set: full raw stack + full feature stack + Grams."""
+    return 4 * (n_users * n * m + n_users * n * d + n_users * d * d)
+
+
+_LIVE_BYTES_CHILD = """
+import sys
+mode, n_users, n, m, d, chunk = sys.argv[1], *map(int, sys.argv[2:])
+import jax
+import repro.core.signature_engine as se
+from repro.data import features as feat
+from repro.data import synthetic as syn
+
+raw, _ = syn.make_task_feature_mixture(n_users, n, m, 8, seed=0)
+cfg = (se.SignatureConfig() if mode == "dense"
+       else se.SignatureConfig(chunk_rows=chunk))
+eng = se.SignatureEngine(feat.FeatureConfig(kind="random_projection",
+                                            d=d), cfg)
+
+peak = 0
+orig = se._chunk_gram_accum
+def spy(*args, **kwargs):
+    # No blocking here: buffers held by the async dispatch queue are
+    # still live arrays, so an unbounded queue shows up in the peak.
+    global peak
+    out = orig(*args, **kwargs)
+    peak = max(peak, sum(x.nbytes for x in jax.live_arrays()))
+    return out
+se._chunk_gram_accum = spy
+jax.block_until_ready(eng.grams(raw))
+print(peak)
+"""
+
+
+def measured_peak_live_bytes(mode: str, n_users: int, n: int, m: int,
+                             d: int, chunk: int) -> int:
+    """Peak LIVE device-array bytes during ingest, sampled at every chunk
+    step in a child process — the empirical check behind the analytic
+    peak-bytes formulas.  Catches exactly the regressions that would
+    re-couple peak memory to n: slicing the whole raw array onto the
+    device, keeping past chunks alive, or letting the async dispatch
+    queue hold every chunk at once (``jax.live_arrays`` sees any such
+    buffer; malloc high-water noise does not pollute it)."""
+    import subprocess
+    import sys
+
+    res = subprocess.run(
+        [sys.executable, "-c", _LIVE_BYTES_CHILD, mode, str(n_users),
+         str(n), str(m), str(d), str(chunk)],
+        capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr[-1000:]
+    return int(res.stdout.strip())
+
+
+def _time_engine(eng: SignatureEngine, raw, top_k: int, n_iter: int = 2
+                 ) -> tuple[float, np.ndarray]:
+    """Min-of-repeats wall-clock (robust to background load spikes)."""
+    lam, _, _ = eng.signatures(raw, top_k=top_k)          # compile
+    jax.block_until_ready(lam)
+    best = np.inf
+    for _ in range(n_iter):
+        t0 = time.perf_counter()
+        lam, _, _ = eng.signatures(raw, top_k=top_k)
+        jax.block_until_ready(lam)
+        best = min(best, time.perf_counter() - t0)
+    return best, np.asarray(lam)
+
+
+SUBSPACE_ITERS = 8
+TASK_RANK = 16
+
+
+def bench_grid(n_users: int, n: int, m: int, d: int, chunk: int
+               ) -> tuple[list[str], dict]:
+    # Low-rank task subspaces (the paper's premise: users of one task
+    # share a modest-rank second-moment structure) — the well-separated
+    # regime where a handful of subspace iterations provably converge;
+    # both eigenvalue parity AND the eigen-residual are asserted below,
+    # so the iteration budget is checked, not assumed.
+    raw, _ = syn.make_task_feature_mixture(n_users, n, m, N_TASKS, seed=0,
+                                           rank=TASK_RANK)
+    fc = feat.FeatureConfig(kind="random_projection", d=d)
+
+    t_host = np.inf
+    for _ in range(2):                  # min-of-2, same policy as device
+        t0 = time.perf_counter()
+        lam_h, _ = host_ingest(raw, fc, TOP_K)
+        t_host = min(t_host, time.perf_counter() - t0)
+    lam_scale = float(lam_h.max())
+
+    modes = [
+        ("jnp_dense", SignatureConfig(subspace_iters=SUBSPACE_ITERS,
+                                      check=True), 1e-3),
+        ("jnp_stream", SignatureConfig(chunk_rows=chunk,
+                                       subspace_iters=SUBSPACE_ITERS,
+                                       check=True), 1e-3),
+        ("pallas_stream", SignatureConfig(backend="pallas",
+                                          chunk_rows=chunk,
+                                          subspace_iters=SUBSPACE_ITERS,
+                                          compute_dtype="bf16"), 5e-2),
+    ]
+    rows, recs = [], []
+    for name, cfg, tol in modes:
+        eng = SignatureEngine(fc, cfg)
+        dt, lam = _time_engine(eng, raw, TOP_K)
+        relerr = float(np.abs(lam - lam_h).max() / lam_scale)
+        assert relerr < tol, (
+            f"{name} top-k eigenvalue parity broken at N={n_users} "
+            f"d={d}: relerr={relerr:.2e} > {tol}")
+        peak = (stream_peak_bytes(n_users, chunk, m, d) if cfg.chunk_rows
+                else dense_peak_bytes(n_users, n, m, d))
+        rec = {"mode": name, "seconds": round(dt, 4),
+               "speedup_vs_host": round(t_host / dt, 2),
+               "lam_relerr": relerr, "peak_bytes": peak}
+        recs.append(rec)
+        rows.append(common.row(
+            f"signature_{name}_N{n_users}_d{d}", dt * 1e6,
+            host_us=round(t_host * 1e6, 1),
+            speedup_vs_host=rec["speedup_vs_host"], parity=True))
+
+    # Streaming peak memory must not move with n.  The analytic formula
+    # has no n term by construction; back it with a MEASURED check: peak
+    # live device-array bytes during ingest at FOUR times n must match
+    # the peak at n up to a couple of chunk buffers (the double-buffered
+    # transfer window), while the dense one-pass peak scales with n.
+    live = {f"stream_at_{mult}n_bytes":
+            measured_peak_live_bytes("stream", n_users, mult * n, m, d,
+                                     chunk)
+            for mult in (1, 4)}
+    live.update({f"dense_at_{mult}n_bytes":
+                 measured_peak_live_bytes("dense", n_users, mult * n, m,
+                                          d, chunk)
+                 for mult in (1, 2)})
+    chunk_bytes = 4 * n_users * chunk * m
+    assert (live["stream_at_4n_bytes"]
+            < live["stream_at_1n_bytes"] + 2 * chunk_bytes), (
+        f"streaming ingest peak live bytes grew with n: {live}")
+    record = {
+        "N": n_users, "n": n, "m": m, "d": d, "top_k": TOP_K,
+        "chunk_rows": chunk, "task_rank": TASK_RANK,
+        "subspace_iters": SUBSPACE_ITERS,
+        "host_s": round(t_host, 4),
+        "modes": recs,
+        "speedup_best": max(r["speedup_vs_host"] for r in recs),
+        "stream_peak_bytes_analytic": stream_peak_bytes(n_users, chunk,
+                                                        m, d),
+        "dense_peak_bytes_analytic_at_n": dense_peak_bytes(n_users, n, m,
+                                                           d),
+        "dense_peak_bytes_analytic_at_2n": dense_peak_bytes(n_users,
+                                                            2 * n, m, d),
+        "measured_peak_live_bytes": live,
+    }
+    return rows, record
+
+
+def run(quick: bool = False, json_path: str | None = None) -> list[str]:
+    if quick:
+        points = [(64, 64, 128, 64, 32)]
+    else:
+        # The ISSUE-4 acceptance point: N=512, d=256 on CPU.
+        points = [(256, 128, 256, 128, 64), (512, 128, 512, 256, 64)]
+    rows, records = [], []
+    for (n_users, n, m, d, chunk) in points:
+        r, rec = bench_grid(n_users, n, m, d, chunk)
+        rows.extend(r)
+        records.append(rec)
+        jax.clear_caches()
+    if not quick:
+        final = records[-1]
+        assert final["speedup_best"] >= 5.0, (
+            f"acceptance: expected >= 5x signature-stage speedup at "
+            f"N={final['N']}, d={final['d']}, got {final['speedup_best']}x")
+    payload = {"quick": quick, "backend": jax.default_backend(),
+               "grid": records}
+    if json_path:
+        common.record_result(json_path, payload)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: small grid, same code paths")
+    ap.add_argument("--json",
+                    default="benchmarks/results/bench_signature.json",
+                    help="where to record the speedup grid")
+    args = ap.parse_args()
+    for r in run(quick=args.quick, json_path=args.json):
+        print(r, flush=True)

@@ -19,15 +19,17 @@ import sys
 import time
 
 SUITES = ["table1", "table2", "fig2", "fig3", "fig4", "comm", "ifca",
-          "robustness", "kernels", "clustering", "roofline"]
+          "robustness", "kernels", "clustering", "signature", "pipeline",
+          "roofline"]
 
 
 def run_suite(name: str, seeds: int) -> list[str]:
     from benchmarks import (bench_clustering, bench_comm_cost,
                             bench_fig2_cifar, bench_fig3_fmnist,
                             bench_fig4_eigvectors, bench_ifca,
-                            bench_kernels, bench_robustness,
-                            bench_roofline, bench_table1_similarity,
+                            bench_kernels, bench_pipeline,
+                            bench_robustness, bench_roofline,
+                            bench_signature, bench_table1_similarity,
                             bench_table2_crossdataset)
 
     s = tuple(range(seeds))
@@ -44,6 +46,10 @@ def run_suite(name: str, seeds: int) -> list[str]:
         # quick grid inside the harness; the full N=4096 sweep (which
         # times the O(N^3) host reference once) runs standalone
         "clustering": lambda: bench_clustering.run(quick=True),
+        # likewise: the full acceptance grids (N=512 ingest, N=256
+        # pipeline) run standalone — the harness smokes the code paths
+        "signature": lambda: bench_signature.run(quick=True),
+        "pipeline": lambda: bench_pipeline.run(quick=True),
         "roofline": lambda: bench_roofline.run(),
     }
     return fns[name]()

@@ -7,6 +7,7 @@ communication ledger.
 
     PYTHONPATH=src python examples/quickstart.py
     PYTHONPATH=src python examples/quickstart.py --cluster-backend jnp
+    PYTHONPATH=src python examples/quickstart.py --host-ingest
 """
 import argparse
 
@@ -15,6 +16,7 @@ import numpy as np
 from repro.core import clustering as clu
 from repro.core import oneshot
 from repro.core.cluster_engine import ClusterConfig
+from repro.core.signature_engine import SignatureConfig
 from repro.core.similarity import SimilarityConfig
 from repro.data import features as feat
 from repro.data import partition as dpart
@@ -26,6 +28,9 @@ def main():
                     choices=["numpy", "jnp", "pallas"],
                     help="GPS decision layer: host reference HAC or the "
                          "device NN-chain ClusterEngine")
+    ap.add_argument("--host-ingest", action="store_true",
+                    help="featurize per user with host numpy (the pre-PR-4 "
+                         "path) instead of the device SignatureEngine")
     args = ap.parse_args()
 
     # 10 users, 2 tasks (vehicles / animals), 10% minority labels.
@@ -35,12 +40,25 @@ def main():
 
     # Phi: fixed shared random projection (ResNet18 surrogate, DESIGN.md §2)
     fc = feat.FeatureConfig(kind="random_projection", d=128)
-    feats = [feat.feature_map(u.x, fc) for u in users]
 
-    res = oneshot.one_shot_clustering(
-        feats, n_clusters=2, cfg=SimilarityConfig(top_k=8),
-        cluster_cfg=ClusterConfig(backend=args.cluster_backend),
-        model_params=62_006)  # paper CNN size, for the comm comparison
+    if args.host_ingest:
+        # Host path: numpy Phi per user, protocol sees feature matrices.
+        feats = [feat.feature_map(u.x, fc) for u in users]
+        res = oneshot.one_shot_clustering(
+            feats, n_clusters=2, cfg=SimilarityConfig(top_k=8),
+            cluster_cfg=ClusterConfig(backend=args.cluster_backend),
+            model_params=62_006)  # paper CNN size, for the comm comparison
+    else:
+        # Raw-data entry point: hand raw shards + the FeatureConfig; the
+        # SignatureEngine featurizes on-device, streaming 128-row chunks
+        # and extracting top-k signatures by subspace iteration (no eigh).
+        res = oneshot.one_shot_clustering(
+            [u.x for u in users], n_clusters=2,
+            cfg=SimilarityConfig(top_k=8),
+            cluster_cfg=ClusterConfig(backend=args.cluster_backend),
+            feature_cfg=fc,
+            signature_cfg=SignatureConfig(chunk_rows=128),
+            model_params=62_006)
 
     np.set_printoptions(precision=2, suppress=True)
     print("\nSimilarity matrix R (paper Table I analogue):")

@@ -5,6 +5,9 @@ from repro.core.similarity import (SimilarityConfig, pad_ragged, gram,
                                    similarity_matrix)
 from repro.core.engine import (ProtocolEngine, ProtocolResult, BACKENDS,
                                make_user_mesh)
+from repro.core.signature_engine import (SignatureConfig, SignatureEngine,
+                                         SIGNATURE_BACKENDS, topk_spectrum,
+                                         subspace_residual)
 from repro.core.clustering import (hac, cut, hac_clusters, random_clusters,
                                    oracle_clusters, spectral_clusters,
                                    clustering_accuracy, adjusted_rand_index,

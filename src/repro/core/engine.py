@@ -22,6 +22,15 @@ fused in ``repro.kernels.gram_project`` on the Pallas path).  Peak memory
 drops from O(N * d^2) to O(block_users * d^2) + the O(N * d * k) signature
 table — exactly what each user receives over the air anyway — so
 multi-thousand-user similarity fits on one host.
+
+``run_raw`` is the RAW-DATA entry point: callers hand per-user raw shards
+plus a ``FeatureConfig`` instead of pre-featurized arrays, and the
+``SignatureEngine`` (``core/signature_engine.py``) runs featurize -> Gram
+-> top-k spectrum on-device (row-chunk streaming, fused Pallas kernel,
+batched subspace iteration instead of the O(d^3) ``eigh``) before the
+relevance stage — raw data to R without the host Phi loop or the
+``(N, n, d)`` feature stack.  Under the shard_map backend the user axis
+of the raw shards is itself sharded over the mesh.
 """
 from __future__ import annotations
 
@@ -35,6 +44,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import similarity as sim
+from repro.core import signature_engine as sig
 
 __all__ = ["ProtocolEngine", "ProtocolResult", "BACKENDS", "make_user_mesh"]
 
@@ -140,6 +150,48 @@ def _sharded_protocol(features, n_valid, *, axis: str, top_k: int,
 
 
 # ---------------------------------------------------------------------------
+# Raw-data path: SignatureEngine ingest -> relevance (no host Phi stage)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("top_k", "impl", "eig", "iters",
+                                   "oversample", "check"))
+def _raw_finish(grams, top_k, eig_floor, impl, eig, iters, oversample,
+                check):
+    """Gram stack -> (r, R, resid) in one jit: top-k spectrum (subspace
+    iteration by default — no O(d^3) eigh) + relevance + symmetrize.
+    The per-user eigen-residual is only computed when the caller will
+    ``check`` it (``resid`` is ``None`` otherwise)."""
+    lam, v = sig.topk_spectrum(grams, top_k, method=eig, iters=iters,
+                               oversample=oversample)
+    resid = sig.subspace_residual(grams, lam, v) if check else None
+    r = sim.relevance_matrix(grams, lam, v, eig_floor, impl=impl)
+    return r, sim.symmetrize(r), resid
+
+
+def _sharded_raw_protocol(x, nv, *, axis: str, engine, top_k: int,
+                          eig_floor: float, impl: str,
+                          assume_full: bool = False):
+    """shard_map body for the raw entry point: each device featurizes its
+    own user shard (the SAME ``SignatureEngine.accumulate_grams`` row-chunk
+    streaming the single-host path runs), extracts top-k signatures
+    locally, then the same two all_gathers as the pre-featurized path
+    (signatures, rows)."""
+    grams = engine.accumulate_grams(x, nv, assume_full=assume_full)
+    lam, v = sig.topk_spectrum(grams, top_k, method=engine.cfg.eig,
+                               iters=engine.cfg.subspace_iters,
+                               oversample=engine.cfg.oversample)
+    v_all = jax.lax.all_gather(v, axis, tiled=True)               # (N, d, k)
+    r_rows = sim.relevance_matrix(grams, lam, v_all, eig_floor,
+                                  impl=impl)                      # (Nl, N)
+    r_full = jax.lax.all_gather(r_rows, axis, tiled=True)         # (N, N)
+    if engine.cfg.check:
+        resid = sig.subspace_residual(grams, lam, v)              # (Nl,)
+        return r_full, sim.symmetrize(r_full), jax.lax.all_gather(
+            resid, axis, tiled=True)
+    return r_full, sim.symmetrize(r_full), jnp.zeros((0,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
 # The engine
 # ---------------------------------------------------------------------------
 
@@ -186,16 +238,7 @@ class ProtocolEngine:
         ``sim.pad_ragged``; padded arrays get a full-length ``n_valid``
         unless the true counts are supplied.
         """
-        if not isinstance(features, (jax.Array, np.ndarray)):
-            if n_valid is not None:
-                raise ValueError("n_valid is derived from ragged input; "
-                                 "pass one or the other")
-            return sim.pad_ragged(features)
-        features = jnp.asarray(features)
-        if n_valid is None:
-            n_valid = jnp.full((features.shape[0],), features.shape[1],
-                               dtype=jnp.float32)
-        return features, jnp.asarray(n_valid, jnp.float32)
+        return sim.prepare_user_batch(features, n_valid, device=True)
 
     # -- protocol stages ----------------------------------------------------
 
@@ -236,6 +279,102 @@ class ProtocolEngine:
         n_users, _, d = feats.shape
         return ProtocolResult(relevance=r, similarity=big_r,
                               n_users=n_users, d=d, top_k=self._top_k(d))
+
+    # -- raw-data entry point ----------------------------------------------
+
+    def _signature_engine(self, feature_cfg, signature_cfg, probe
+                          ) -> "sig.SignatureEngine":
+        """Build the ingest engine, deriving its backend from the protocol
+        backend when not given and rejecting conflicting combinations."""
+        if signature_cfg is None:
+            signature_cfg = sig.SignatureConfig(backend=self.cfg.backend,
+                                                mesh_axis=self.cfg.mesh_axis)
+        if ((signature_cfg.backend == "shard_map")
+                != (self.cfg.backend == "shard_map")):
+            raise ValueError(
+                f"signature backend {signature_cfg.backend!r} conflicts "
+                f"with protocol backend {self.cfg.backend!r}: shard_map "
+                "ingest runs inside the sharded protocol — use both or "
+                "neither")
+        if (signature_cfg.backend == "shard_map"
+                and signature_cfg.mesh_axis != self.cfg.mesh_axis):
+            raise ValueError(
+                f"signature mesh_axis {signature_cfg.mesh_axis!r} "
+                f"conflicts with protocol mesh_axis "
+                f"{self.cfg.mesh_axis!r}: the raw shard_map pipeline "
+                "shards users over ONE axis")
+        return sig.SignatureEngine(feature_cfg, signature_cfg, probe=probe)
+
+    def run_raw(self, raw, feature_cfg, n_valid=None, probe=None,
+                signature_cfg: "sig.SignatureConfig | None" = None
+                ) -> ProtocolResult:
+        """Full protocol from RAW user shards: ``raw (N, n, m)`` (or a
+        ragged list of ``(n_i, m)``) + a ``FeatureConfig`` -> ``(r, R)``.
+
+        The ``SignatureEngine`` ingests on-device (streamed featurize ->
+        Gram, batched top-k subspace iteration); the relevance stage then
+        runs on the resulting ``(N, d', d')`` Gram stack in the same jit.
+        Pass the ``pca`` probe set via ``probe=``.  ``block_users``
+        streaming belongs to the pre-featurized path (it never holds the
+        Gram stack, which raw relevance needs) and is rejected here.
+        """
+        if self.cfg.block_users:
+            raise ValueError(
+                "run_raw computes relevance on the (N, d', d') Gram stack "
+                "and does not support block_users streaming; stream the "
+                "ROW axis instead via SignatureConfig.chunk_rows")
+        engine = self._signature_engine(feature_cfg, signature_cfg, probe)
+        full = (n_valid is None
+                and isinstance(raw, (jax.Array, np.ndarray)))
+        raw, nv = engine.prepare(raw, n_valid)
+        n_users, _, m = raw.shape
+        d_out = engine.out_dim(m)
+        top_k = self._top_k(d_out)
+        if self.cfg.backend == "shard_map":
+            r, big_r, resid = self._run_raw_shard_map(engine, raw, nv,
+                                                      top_k, full)
+        else:
+            grams = engine.accumulate_grams(raw, nv, assume_full=full)
+            r, big_r, resid = _raw_finish(grams, top_k, self.cfg.eig_floor,
+                                          self.impl, engine.cfg.eig,
+                                          engine.cfg.subspace_iters,
+                                          engine.cfg.oversample,
+                                          engine.cfg.check)
+        if engine.cfg.check:
+            engine.verify_convergence(resid)
+        return ProtocolResult(relevance=r, similarity=big_r,
+                              n_users=n_users, d=d_out, top_k=top_k)
+
+    def similarity_from_raw(self, raw, feature_cfg, n_valid=None,
+                            probe=None, signature_cfg=None) -> jax.Array:
+        """``R (N, N)`` straight from raw shards — see ``run_raw``."""
+        return self.run_raw(raw, feature_cfg, n_valid=n_valid, probe=probe,
+                            signature_cfg=signature_cfg).similarity
+
+    def _run_raw_shard_map(self, engine, raw, nv, top_k: int,
+                           assume_full: bool = False
+                           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        axis = self.cfg.mesh_axis
+        mesh = self.mesh or make_user_mesh(axis)
+        n_users = raw.shape[0]
+        axis_size = mesh.shape[axis]
+        if n_users % axis_size:
+            raise ValueError(
+                f"n_users={n_users} not divisible by mesh axis {axis!r}"
+                f" of size {axis_size}")
+        engine.params_for(raw.shape[-1])      # fit Phi OUTSIDE the trace
+        body = partial(_sharded_raw_protocol, axis=axis, engine=engine,
+                       top_k=top_k, eig_floor=self.cfg.eig_floor,
+                       impl=self.impl, assume_full=assume_full)
+        spec_in = P(axis)
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(spec_in, spec_in),
+                       out_specs=(P(), P(), P()), check_rep=False)
+        with mesh:
+            raw = jax.device_put(jnp.asarray(raw),
+                                 NamedSharding(mesh, P(axis)))
+            nv = jax.device_put(nv, NamedSharding(mesh, P(axis)))
+            return jax.jit(fn)(raw, nv)
 
     def _dispatch(self, feats: jax.Array, nv: jax.Array
                   ) -> tuple[jax.Array, jax.Array]:

@@ -47,6 +47,12 @@ class CommLedger:
       ``O(N * d * k)`` table in one download (its own row rides along for
       table alignment) instead of N - 1 per-peer duplicates.
 
+    The ledger is INGEST-INVARIANT: whether signatures come from the
+    host-numpy Phi stage, the streaming ``SignatureEngine`` (raw-data
+    entry point) or the subspace-iteration eigensolver, what each user
+    uploads is the same ``(k x d)`` eigenvector block + relevance row —
+    the per-user upload stays O(k * d) regardless of how it was computed.
+
     ``per_user_upload``: what one user sends (V_i + its relevance row).
     ``gps_total``: what the GPS receives (N relevance rows).
     ``iterative_equiv``: what ONE ROUND of weight-based iterative
@@ -131,7 +137,10 @@ def one_shot_clustering(features: Sequence[np.ndarray] | jax.Array,
                         model_params: int = 0,
                         n_valid: jax.Array | None = None,
                         mesh=None,
-                        cluster_cfg: ClusterConfig | None = None
+                        cluster_cfg: ClusterConfig | None = None,
+                        feature_cfg=None,
+                        probe: np.ndarray | None = None,
+                        signature_cfg=None
                         ) -> OneShotResult:
     """Run paper Algorithm 2 end-to-end on per-user feature matrices.
 
@@ -139,6 +148,14 @@ def one_shot_clustering(features: Sequence[np.ndarray] | jax.Array,
     array, with the true per-user counts in ``n_valid``).  The similarity
     backend — dense / blockwise-streaming / shard_map — is chosen by
     ``cfg``; ``mesh`` is only consulted by the shard_map backend.
+
+    RAW-DATA ENTRY POINT: passing ``feature_cfg`` (a
+    ``repro.data.features.FeatureConfig``) declares ``features`` to be
+    raw user shards ``(n_i, m)`` instead — the device-resident
+    ``SignatureEngine`` then runs featurize -> Gram -> top-k signatures
+    (row-chunk streaming / fused Pallas kernel / sharded users, chosen by
+    ``signature_cfg``) with no host Phi stage and no ``(N, n, d)``
+    feature stack.  ``probe`` carries the public ``pca`` probe set.
 
     ``cluster_cfg`` chooses the GPS decision layer: the default numpy
     reference HAC, or the device NN-chain ("jnp" / "pallas") which keeps
@@ -152,8 +169,16 @@ def one_shot_clustering(features: Sequence[np.ndarray] | jax.Array,
             f"conflicting linkages: linkage={linkage!r} vs "
             f"cluster_cfg.linkage={cluster_cfg.linkage!r} — set it on "
             "cluster_cfg only")
+    if feature_cfg is None and (probe is not None
+                                or signature_cfg is not None):
+        raise ValueError("probe/signature_cfg configure the raw-data "
+                         "entry point; pass feature_cfg to enable it")
     engine = ProtocolEngine(cfg, mesh=mesh)
-    res = engine.run(features, n_valid)
+    if feature_cfg is not None:
+        res = engine.run_raw(features, feature_cfg, n_valid=n_valid,
+                             probe=probe, signature_cfg=signature_cfg)
+    else:
+        res = engine.run(features, n_valid)
 
     ccfg = cluster_cfg or ClusterConfig(linkage=linkage)
     cengine = ClusterEngine(ccfg)

@@ -27,6 +27,7 @@ import numpy as np
 __all__ = [
     "SimilarityConfig",
     "pad_ragged",
+    "prepare_user_batch",
     "gram",
     "spectrum",
     "user_signature",
@@ -72,14 +73,31 @@ class SimilarityConfig:
     block_users: int = 0
     mesh_axis: str = "data"
 
+    def __post_init__(self):
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 = all d eigenpairs), "
+                             f"got {self.top_k}")
+        if self.eig_floor <= 0:
+            raise ValueError(f"eig_floor must be positive (it clamps the "
+                             f"min/max ratio), got {self.eig_floor}")
+        if self.impl not in ("jnp", "pallas"):
+            raise ValueError(f"impl must be 'jnp' or 'pallas', "
+                             f"got {self.impl!r}")
+        if self.block_users < 0:
+            raise ValueError(f"block_users must be >= 0, "
+                             f"got {self.block_users}")
 
-def pad_ragged(features: Sequence[np.ndarray]
+
+def pad_ragged(features: Sequence[np.ndarray], device: bool = True
                ) -> tuple[jax.Array, jax.Array]:
     """Zero-pad a ragged list of per-user ``(n_i, d)`` feature matrices.
 
     Returns ``(padded (N, n_max, d) float32, n_valid (N,) float32)`` — the
     single conversion point used by ``similarity_matrix``,
-    ``one_shot_clustering`` and the ``ProtocolEngine``.
+    ``one_shot_clustering``, the ``ProtocolEngine`` and the
+    ``SignatureEngine``.  ``device=False`` keeps the padded stack as host
+    numpy (the raw-ingest streaming path device-puts one row-chunk at a
+    time instead of the whole stack).
     """
     counts = [f.shape[0] for f in features]
     n_max = max(counts)
@@ -87,7 +105,36 @@ def pad_ragged(features: Sequence[np.ndarray]
     padded = np.zeros((len(features), n_max, d), dtype=np.float32)
     for i, f in enumerate(features):
         padded[i, : f.shape[0]] = f
-    return jnp.asarray(padded), jnp.asarray(counts, dtype=jnp.float32)
+    counts = np.asarray(counts, dtype=np.float32)
+    if device:
+        return jnp.asarray(padded), jnp.asarray(counts)
+    return padded, counts
+
+
+def prepare_user_batch(data, n_valid=None, device: bool = True):
+    """Normalize either accepted user-batch form to ``(padded, n_valid)``.
+
+    Ragged lists of per-user ``(n_i, d)`` arrays are zero-padded via
+    ``pad_ragged``; stacked ``(N, n, d)`` arrays pass through (host numpy
+    when ``device=False`` — the streaming ingest path — device arrays
+    otherwise) with full-length counts unless the true ones are supplied.
+    The single input-normalization point shared by ``ProtocolEngine`` and
+    ``SignatureEngine``.
+    """
+    if not isinstance(data, (jax.Array, np.ndarray)):
+        if n_valid is not None:
+            raise ValueError("n_valid is derived from ragged input; "
+                             "pass one or the other")
+        padded, counts = pad_ragged(data, device=device)
+        return padded, jnp.asarray(counts)
+    if data.ndim != 3:
+        raise ValueError(f"user batch must be (N, n, m)-shaped "
+                         f"(users, rows, dim), got shape {data.shape}")
+    if device:
+        data = jnp.asarray(data)
+    if n_valid is None:
+        n_valid = jnp.full((data.shape[0],), data.shape[1], jnp.float32)
+    return data, jnp.asarray(n_valid, jnp.float32)
 
 
 # ---------------------------------------------------------------------------

@@ -3,4 +3,5 @@ from repro.data.synthetic import (SyntheticImageSpec, make_task_dataset,
                                   CIFAR_LIKE, FMNIST_LIKE, CIFAR100_LIKE)
 from repro.data.partition import (UserSpec, federated_split,
                                   paper_cifar_two_task, paper_fmnist_three_task)
-from repro.data.features import feature_map, FeatureConfig
+from repro.data.features import (feature_map, FeatureConfig, probe_digest,
+                                 phi_params, phi_apply, phi_out_dim)

@@ -13,26 +13,100 @@ to be common across users and informative:
 
 All maps are deterministic in ``FeatureConfig.seed`` so every user applies
 the *same* Phi, as the protocol requires.
+
+Two execution forms share the same parameters:
+
+  * ``feature_map(x, cfg, probe=...)`` — the host numpy reference, one
+    user at a time (the original ingest path, kept as the parity oracle).
+  * ``phi_params(cfg, m, probe=...)`` + ``phi_apply(x, params, cfg)`` —
+    the split the device-resident ``SignatureEngine`` uses: parameters are
+    fixed host arrays derived from the seed (and the public probe for
+    ``pca``), application is pure jit-able jnp that vmaps over users and
+    streams over row chunks.
+
+``FeatureConfig`` is a frozen *hashable* dataclass: the ``pca`` probe set
+is NOT stored on it (a raw ndarray field breaks ``__eq__``/``hash`` with
+"ambiguous truth value" the moment configs are compared or cached) — the
+config records only a digest of the probe, and callers pass the array
+explicitly where Phi is built.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import hashlib
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["FeatureConfig", "feature_map"]
+__all__ = ["FeatureConfig", "feature_map", "probe_digest",
+           "phi_params", "phi_apply", "phi_out_dim", "PHI_KINDS"]
+
+PHI_KINDS = ("identity", "random_projection", "random_conv", "pca")
+
+
+def probe_digest(probe: np.ndarray) -> str:
+    """Stable content digest of a public probe set (shape + fp32 bytes)."""
+    arr = np.ascontiguousarray(np.asarray(probe, dtype=np.float32))
+    h = hashlib.sha256()
+    h.update(repr(arr.shape).encode())
+    h.update(arr.tobytes())
+    return h.hexdigest()[:16]
 
 
 @dataclasses.dataclass(frozen=True)
 class FeatureConfig:
+    """Which shared Phi every user applies (hashable, probe-free).
+
+    ``probe_digest`` optionally pins the ``pca`` probe content: when set,
+    any probe array passed alongside this config must hash to it (guards
+    against two callers silently fitting Phi on different "public" sets).
+    Use :func:`probe_digest` to compute it.
+    """
+
     kind: str = "random_projection"   # identity|random_projection|random_conv|pca
     d: int = 256                      # output feature dimension
     seed: int = 7
     image_hw: tuple[int, int, int] | None = None  # (H, W, C) for random_conv
-    probe: np.ndarray | None = None   # public probe set for pca
+    probe_digest: str | None = None   # content digest of the pca probe set
+
+    def __post_init__(self):
+        if self.kind not in PHI_KINDS:
+            raise ValueError(f"unknown feature map kind {self.kind!r}; "
+                             f"expected one of {PHI_KINDS}")
+        if self.d <= 0:
+            raise ValueError(f"feature dim d must be positive, got {self.d}")
+        if self.kind == "random_conv" and self.image_hw is None:
+            raise ValueError("random_conv needs image_hw=(H, W, C)")
+        if self.image_hw is not None:
+            object.__setattr__(self, "image_hw", tuple(self.image_hw))
+
+    def bind_probe(self, probe: np.ndarray) -> "FeatureConfig":
+        """Pin this config to a concrete probe set (content digest)."""
+        return dataclasses.replace(self, probe_digest=probe_digest(probe))
+
+
+def _check_probe(cfg: FeatureConfig, probe: np.ndarray | None) -> np.ndarray:
+    if probe is None:
+        raise ValueError("pca needs a public probe set: pass probe=... "
+                         "explicitly (FeatureConfig no longer carries the "
+                         "array, only its digest)")
+    if cfg.probe_digest is not None:
+        got = probe_digest(probe)
+        if got != cfg.probe_digest:
+            raise ValueError(
+                f"probe content digest {got} does not match the one pinned "
+                f"on FeatureConfig ({cfg.probe_digest}) — Phi must be fit "
+                "on the same public set for every user")
+    return np.asarray(probe, dtype=np.float32)
+
+
+def _check_dim(cfg: FeatureConfig, m: int, what: str = "input") -> None:
+    if cfg.d > m:
+        raise ValueError(
+            f"feature dim d={cfg.d} exceeds {what} dim m={m}: "
+            f"{cfg.kind!r} only projects down — lower d or use identity")
 
 
 def _rp_matrix(m: int, d: int, seed: int) -> np.ndarray:
@@ -78,31 +152,111 @@ def _random_conv_features(x_flat: jax.Array, w1: jax.Array, w2: jax.Array,
     return y.reshape((y.shape[0], -1))
 
 
-def feature_map(x: np.ndarray, cfg: FeatureConfig) -> np.ndarray:
-    """Apply Phi to a user's raw data ``x (n, m)`` -> ``(n, d')``."""
+# ---------------------------------------------------------------------------
+# Parameter / application split (device ingest path)
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=64)
+def _cached_params(cfg: FeatureConfig, m: int) -> dict:
+    """Seed-deterministic Phi parameters for the probe-free kinds."""
     if cfg.kind == "identity":
-        return np.asarray(x, dtype=np.float32)
+        return {}
     if cfg.kind == "random_projection":
-        w = _rp_matrix(x.shape[1], cfg.d, cfg.seed)
-        return np.asarray(x, dtype=np.float32) @ w
-    if cfg.kind == "random_conv":
-        if cfg.image_hw is None:
-            raise ValueError("random_conv needs image_hw=(H, W, C)")
-        p = _conv_params(cfg.image_hw[2], cfg.seed)
-        feats = _random_conv_features(jnp.asarray(x, dtype=jnp.float32),
-                                      jnp.asarray(p["w1"]),
-                                      jnp.asarray(p["w2"]), cfg.image_hw)
-        feats = np.asarray(feats)
-        if cfg.d and cfg.d < feats.shape[1]:
-            w = _rp_matrix(feats.shape[1], cfg.d, cfg.seed + 1)
-            feats = feats @ w
-        return feats
+        _check_dim(cfg, m)
+        return {"w": _rp_matrix(m, cfg.d, cfg.seed)}
+    # random_conv: conv filters + (optionally) a secondary projection from
+    # the conv feature width down to d.
+    p = _conv_params(cfg.image_hw[2], cfg.seed)
+    conv_dim = _conv_out_dim(cfg.image_hw)
+    if cfg.d and cfg.d < conv_dim:
+        p = dict(p, w_rp=_rp_matrix(conv_dim, cfg.d, cfg.seed + 1))
+    return p
+
+
+def _conv_out_dim(hw: tuple[int, int, int]) -> int:
+    """Flat width of ``_random_conv_features`` without running the convs."""
+    h, w, _ = hw
+    # Two stride-2 SAME convs: ceil(ceil(h/2)/2); then a VALID gh-pool.
+    h2 = -(-(-(-h // 2)) // 2)
+    w2 = -(-(-(-w // 2)) // 2)
+    gh, gw = max(1, h2 // 4), max(1, w2 // 4)
+    return (h2 // gh) * (w2 // gw) * 64
+
+
+def phi_params(cfg: FeatureConfig, m: int,
+               probe: np.ndarray | None = None) -> dict:
+    """Host-side Phi parameters, deterministic in ``cfg.seed`` (and the
+    probe content for ``pca``).  Everything downstream — numpy reference
+    and jnp device path alike — applies these exact arrays, which is what
+    makes Phi shared across users and identical across processes."""
     if cfg.kind == "pca":
-        if cfg.probe is None:
-            raise ValueError("pca needs a public probe set")
-        probe = np.asarray(cfg.probe, dtype=np.float32)
+        probe = _check_probe(cfg, probe)
+        _check_dim(cfg, probe.shape[1], what="probe")
         mu = probe.mean(0, keepdims=True)
         _, _, vt = np.linalg.svd(probe - mu, full_matrices=False)
-        basis = vt[: cfg.d].T
-        return (np.asarray(x, dtype=np.float32) - mu) @ basis
-    raise ValueError(f"unknown feature map kind {cfg.kind!r}")
+        return {"mu": mu, "basis": np.ascontiguousarray(vt[: cfg.d].T)}
+    return _cached_params(cfg, m)
+
+
+def phi_out_dim(cfg: FeatureConfig, m: int,
+                probe: np.ndarray | None = None) -> int:
+    """Output feature dimension d' of Phi for input dim ``m``."""
+    if cfg.kind == "identity":
+        return m
+    if cfg.kind == "random_projection":
+        return cfg.d
+    if cfg.kind == "pca":
+        if probe is not None:
+            return min(cfg.d, np.asarray(probe).shape[0],
+                       np.asarray(probe).shape[1])
+        return cfg.d
+    conv_dim = _conv_out_dim(cfg.image_hw)
+    return cfg.d if (cfg.d and cfg.d < conv_dim) else conv_dim
+
+
+def phi_apply(x: jax.Array, params: dict, cfg: FeatureConfig) -> jax.Array:
+    """Pure-jnp Phi on one chunk ``x (n, m)`` -> ``(n, d')``.
+
+    Jit-able (``cfg`` is hashable: pass it as a static argument) and
+    vmap-able over a user axis; the streaming ``SignatureEngine`` calls it
+    per row-chunk so the full feature stack never materializes.
+    """
+    x = x.astype(jnp.float32)
+    if cfg.kind == "identity":
+        return x
+    if cfg.kind == "random_projection":
+        return x @ params["w"]
+    if cfg.kind == "pca":
+        return (x - params["mu"]) @ params["basis"]
+    feats = _random_conv_features(x, jnp.asarray(params["w1"]),
+                                  jnp.asarray(params["w2"]), cfg.image_hw)
+    if "w_rp" in params:
+        feats = feats @ params["w_rp"]
+    return feats
+
+
+# ---------------------------------------------------------------------------
+# Numpy reference (host ingest path — the parity oracle)
+# ---------------------------------------------------------------------------
+
+def feature_map(x: np.ndarray, cfg: FeatureConfig,
+                probe: np.ndarray | None = None) -> np.ndarray:
+    """Apply Phi to a user's raw data ``x (n, m)`` -> ``(n, d')``."""
+    x = np.asarray(x, dtype=np.float32)
+    if cfg.kind == "identity":
+        return x
+    if cfg.kind == "random_projection":
+        _check_dim(cfg, x.shape[1])
+        w = _rp_matrix(x.shape[1], cfg.d, cfg.seed)
+        return x @ w
+    if cfg.kind == "random_conv":
+        p = phi_params(cfg, x.shape[1])
+        feats = np.asarray(_random_conv_features(
+            jnp.asarray(x), jnp.asarray(p["w1"]), jnp.asarray(p["w2"]),
+            cfg.image_hw))
+        if "w_rp" in p:
+            feats = feats @ p["w_rp"]
+        return feats
+    # pca
+    p = phi_params(cfg, x.shape[1], probe=probe)
+    return (x - p["mu"]) @ p["basis"]

@@ -1,0 +1,2 @@
+from repro.kernels.featurize_gram.ops import featurize_gram
+from repro.kernels.featurize_gram.ref import featurize_gram_ref

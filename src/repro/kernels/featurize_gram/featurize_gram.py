@@ -1,0 +1,77 @@
+"""Fused featurize -> Gram Pallas kernel (paper Eq. 1 from RAW data).
+
+Computes ``G = (X W)^T (X W)`` for raw rows ``X (n, m)`` and a shared
+projection ``W (m, d)`` without materializing the feature matrix
+``F = X W`` in HBM: the grid walks row tiles ``X_t (bn, m)``, projects
+each on the MXU, and immediately contracts ``F_t^T F_t`` into a ``(d, d)``
+fp32 accumulator.  ``F`` exists only one ``(bn, d)`` tile at a time in
+VMEM — the fusion that lets the streaming ``SignatureEngine`` ingest raw
+user shards with peak memory O(chunk * m + d^2) instead of O(n * d).
+
+Mixed precision: the matmul inputs ride at the *input* dtype (cast to
+bf16 by ``ops.featurize_gram(compute_dtype="bf16")`` for MXU-rate
+compute) while both ``dot_general`` accumulations are forced to fp32 via
+``preferred_element_type`` — bf16 compute, fp32 accumulate.  The fp32
+reference path is the same kernel with fp32 inputs (and
+``ref.featurize_gram_ref`` outside Pallas entirely).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, n_steps: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    f = jax.lax.dot_general(
+        x_ref[...], w_ref[...],
+        (((1,), (0,)), ((), ())),            # (bn, m) @ (m, d) -> (bn, d)
+        preferred_element_type=jnp.float32)
+    f = f.astype(x_ref.dtype)                # bf16 inputs -> bf16 compute
+    acc_ref[...] += jax.lax.dot_general(
+        f, f,
+        (((0,), (0,)), ((), ())),            # contract bn: -> (d, d)
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(0) == n_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def featurize_gram_pallas(x: jax.Array, w: jax.Array, block_n: int = 128,
+                          interpret: bool = True) -> jax.Array:
+    """``x (n, m)``, ``w (m, d)`` -> ``(x w)^T (x w)  (d, d)`` fp32.
+
+    ``n`` must be a ``block_n`` multiple and ``m``/``d`` lane multiples
+    (128); ``ops.py`` pads.  ``W`` and the ``(d, d)`` accumulator stay
+    VMEM-resident across the whole row walk (``m*d + d^2 + bn*(m+d)``
+    floats — fine for the protocol's d <= 1k feature widths).
+    """
+    n, m = x.shape
+    mw, d = w.shape
+    if mw != m:
+        raise ValueError(f"bad shapes x={x.shape} w={w.shape}")
+    if n % block_n or m % 128 or d % 128:
+        raise ValueError(f"{(n, m, d)} not divisible by ({block_n}, 128, "
+                         f"128)")
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_steps=grid[0]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, m), lambda t: (t, 0)),
+            pl.BlockSpec((m, d), lambda t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((d, d), lambda t: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,22 @@
+"""jnp oracle for the fused featurize->Gram kernel.
+
+``(X W)^T (X W)`` computed the obvious two-matmul way in fp32 — the
+parity reference for both the Pallas kernel and the bf16 compute path.
+Unnormalized, like ``kernels.gram``: callers divide by ``n_valid``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def featurize_gram_ref(x: jax.Array, w: jax.Array | None = None
+                       ) -> jax.Array:
+    """``x (n, m)``, ``w (m, d)`` -> ``(x w)^T (x w)  (d, d)`` fp32.
+
+    ``w=None`` degenerates to the plain Gram ``x^T x`` (identity Phi).
+    """
+    f = x.astype(jnp.float32)
+    if w is not None:
+        f = f @ w.astype(jnp.float32)
+    return f.T @ f

@@ -15,6 +15,11 @@ the protocol-side analogue of ``launch/train.py`` / ``launch/serve.py``:
   PYTHONPATH=src python -m repro.launch.protocol --users 512 \\
       --backend shard_map --devices 8
 
+  # RAW-DATA entry point: device-resident ingest (SignatureEngine) —
+  # Phi + Gram streamed in row chunks, batched top-k subspace iteration
+  PYTHONPATH=src python -m repro.launch.protocol --users 512 \\
+      --raw-dim 256 --feature random_projection --dim 64 --chunk-rows 32
+
 ``--devices N`` forces N host platform devices and MUST act before jax
 initializes, so all repro/jax imports happen inside ``main`` after the
 flag is set.
@@ -43,6 +48,20 @@ def main() -> None:
                     choices=["average", "single", "complete"])
     ap.add_argument("--block-users", type=int, default=0,
                     help="> 0 enables blockwise streaming (single host)")
+    ap.add_argument("--raw-dim", type=int, default=0,
+                    help="> 0 enables the RAW-DATA entry point: users hand "
+                         "raw m-dim shards and the SignatureEngine "
+                         "featurizes on-device (m = this value)")
+    ap.add_argument("--feature", default="random_projection",
+                    choices=["identity", "random_projection"],
+                    help="shared Phi for the raw entry point")
+    ap.add_argument("--chunk-rows", type=int, default=0,
+                    help="> 0 streams raw ingest in row chunks of this "
+                         "size (peak memory independent of --samples)")
+    ap.add_argument("--eig", default="subspace",
+                    choices=["subspace", "eigh"],
+                    help="raw-path eigensolver: batched top-k subspace "
+                         "iteration (O(d^2 k iters)) or exact eigh")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (shard_map demos)")
     ap.add_argument("--seed", type=int, default=0)
@@ -59,23 +78,42 @@ def main() -> None:
     from repro.core import clustering as clu
     from repro.core import oneshot
     from repro.core.cluster_engine import ClusterConfig
+    from repro.core.signature_engine import SignatureConfig
     from repro.core.similarity import SimilarityConfig
+    from repro.data.features import FeatureConfig
     from repro.data import synthetic as syn
 
+    raw_mode = args.raw_dim > 0
+    mix_dim = args.raw_dim if raw_mode else args.dim
     feats, task_ids = syn.make_task_feature_mixture(
-        args.users, args.samples, args.dim, args.tasks, seed=args.seed)
+        args.users, args.samples, mix_dim, args.tasks, seed=args.seed)
     cfg = SimilarityConfig(top_k=args.top_k, backend=args.backend,
                            block_users=args.block_users)
     ccfg = ClusterConfig(backend=args.cluster_backend, linkage=args.linkage)
-    print(f"{args.users} users x {args.samples} samples x d={args.dim}, "
+    feature_cfg = signature_cfg = None
+    sig_dim = args.dim
+    if raw_mode:
+        from repro.data.features import phi_out_dim
+
+        feature_cfg = FeatureConfig(kind=args.feature, d=args.dim,
+                                    seed=args.seed)
+        sig_dim = phi_out_dim(feature_cfg, mix_dim)   # identity: d' = m
+        signature_cfg = SignatureConfig(backend=args.backend,
+                                        chunk_rows=args.chunk_rows,
+                                        eig=args.eig)
+    print(f"{args.users} users x {args.samples} samples x "
+          f"{'m=%d -> d=%d (%s)' % (mix_dim, sig_dim, args.feature) if raw_mode else 'd=%d' % args.dim}, "
           f"{args.tasks} tasks | backend={args.backend} "
           f"cluster_backend={args.cluster_backend} "
-          f"block_users={args.block_users} devices={len(jax.devices())}")
+          f"block_users={args.block_users} "
+          f"raw={raw_mode} chunk_rows={args.chunk_rows} "
+          f"devices={len(jax.devices())}")
 
     t0 = time.time()
-    res = oneshot.one_shot_clustering(jax.numpy.asarray(feats),
-                                      n_clusters=args.tasks, cfg=cfg,
-                                      cluster_cfg=ccfg)
+    res = oneshot.one_shot_clustering(
+        feats if raw_mode else jax.numpy.asarray(feats),
+        n_clusters=args.tasks, cfg=cfg, cluster_cfg=ccfg,
+        feature_cfg=feature_cfg, signature_cfg=signature_cfg)
     labels = np.asarray(res.labels)           # host sync for reporting only
     dt = time.time() - t0
     acc = clu.clustering_accuracy(labels, task_ids)

@@ -1,0 +1,192 @@
+"""Feature-map substrate: the jnp Phi ports match the numpy reference,
+every Phi kind is deterministic in the seed ACROSS PROCESSES (the
+protocol requires all users to apply the same map), and ``FeatureConfig``
+is a well-behaved hashable config (no raw probe array on it)."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import features as feat
+from repro.data import tokens as tok
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _probe(rng):
+    return rng.standard_normal((60, 48)).astype(np.float32)
+
+
+class TestPhiPortParity:
+    """phi_params + phi_apply (the jit-able device path) == feature_map
+    (the numpy reference) for every Phi kind."""
+
+    @pytest.mark.parametrize("kind,kwargs,m", [
+        ("identity", {}, 33),
+        ("random_projection", {"d": 16}, 48),
+        ("random_conv", {"d": 32, "image_hw": (8, 8, 3)}, 8 * 8 * 3),
+        ("random_conv", {"d": 2048, "image_hw": (8, 8, 3)}, 8 * 8 * 3),
+    ])
+    def test_matches_numpy_reference(self, rng, kind, kwargs, m):
+        x = rng.standard_normal((12, m)).astype(np.float32)
+        cfg = feat.FeatureConfig(kind=kind, **kwargs)
+        ref = feat.feature_map(x, cfg)
+        out = np.asarray(feat.phi_apply(jnp.asarray(x),
+                                        feat.phi_params(cfg, m), cfg))
+        assert ref.shape == out.shape == (12, feat.phi_out_dim(cfg, m))
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+    def test_pca_matches_numpy_reference(self, rng):
+        probe = _probe(rng)
+        x = rng.standard_normal((12, 48)).astype(np.float32)
+        cfg = feat.FeatureConfig(kind="pca", d=8)
+        ref = feat.feature_map(x, cfg, probe=probe)
+        params = feat.phi_params(cfg, 48, probe=probe)
+        out = np.asarray(feat.phi_apply(jnp.asarray(x), params, cfg))
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+    def test_vmap_over_users(self, rng):
+        import jax
+
+        x = rng.standard_normal((5, 10, 48)).astype(np.float32)
+        cfg = feat.FeatureConfig(kind="random_projection", d=16)
+        params = feat.phi_params(cfg, 48)
+        batched = np.asarray(jax.vmap(
+            lambda xc: feat.phi_apply(xc, params, cfg))(jnp.asarray(x)))
+        for i in range(5):
+            np.testing.assert_allclose(batched[i],
+                                       feat.feature_map(x[i], cfg),
+                                       rtol=1e-4, atol=1e-4)
+
+
+class TestFeatureConfigHygiene:
+    """The satellite fix: frozen config must hash/compare cleanly."""
+
+    def test_hashable_and_comparable(self):
+        a = feat.FeatureConfig(kind="random_projection", d=16, seed=3)
+        b = feat.FeatureConfig(kind="random_projection", d=16, seed=3)
+        assert a == b and hash(a) == hash(b)
+        assert {a: "x"}[b] == "x"                  # usable as a cache key
+        assert a != dataclasses.replace(a, seed=4)
+
+    def test_probe_rides_as_digest(self, rng):
+        probe = _probe(rng)
+        a = feat.FeatureConfig(kind="pca", d=8).bind_probe(probe)
+        b = feat.FeatureConfig(kind="pca", d=8).bind_probe(probe.copy())
+        assert a == b and hash(a) == hash(b)
+        assert a.probe_digest == feat.probe_digest(probe)
+
+    def test_probe_digest_mismatch_raises(self, rng):
+        probe = _probe(rng)
+        cfg = feat.FeatureConfig(kind="pca", d=8).bind_probe(probe)
+        other = probe + 1.0
+        with pytest.raises(ValueError, match="digest"):
+            feat.phi_params(cfg, 48, probe=other)
+
+    def test_pca_without_probe_raises(self, rng):
+        x = rng.standard_normal((10, 48)).astype(np.float32)
+        cfg = feat.FeatureConfig(kind="pca", d=8)
+        with pytest.raises(ValueError, match="probe"):
+            feat.feature_map(x, cfg)
+        with pytest.raises(ValueError, match="probe"):
+            feat.phi_params(cfg, 48)
+
+    def test_validation_errors(self):
+        with pytest.raises(ValueError, match="kind"):
+            feat.FeatureConfig(kind="resnet")
+        with pytest.raises(ValueError, match="positive"):
+            feat.FeatureConfig(d=0)
+        with pytest.raises(ValueError, match="image_hw"):
+            feat.FeatureConfig(kind="random_conv")
+
+    def test_d_exceeding_m_raises(self, rng):
+        x = rng.standard_normal((10, 12)).astype(np.float32)
+        with pytest.raises(ValueError, match="exceeds"):
+            feat.feature_map(x, feat.FeatureConfig(kind="random_projection",
+                                                   d=64))
+        with pytest.raises(ValueError, match="exceeds"):
+            feat.phi_params(feat.FeatureConfig(kind="pca", d=64), 12,
+                            probe=x)
+
+
+DETERMINISM_SCRIPT = textwrap.dedent("""
+    import hashlib
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.data import features as feat
+
+    rng = np.random.default_rng(123)
+    x = rng.standard_normal((12, 48)).astype(np.float32)
+    x_img = rng.standard_normal((12, 8 * 8 * 3)).astype(np.float32)
+    probe = rng.standard_normal((60, 48)).astype(np.float32)
+    parts = []
+    for cfg, xx, pr in [
+        (feat.FeatureConfig(kind="identity"), x, None),
+        (feat.FeatureConfig(kind="random_projection", d=16, seed=5), x,
+         None),
+        (feat.FeatureConfig(kind="random_conv", d=32, image_hw=(8, 8, 3),
+                            seed=5), x_img, None),
+        (feat.FeatureConfig(kind="pca", d=8, seed=5), x, probe),
+    ]:
+        ref = feat.feature_map(xx, cfg, probe=pr)
+        params = feat.phi_params(cfg, xx.shape[1], probe=pr)
+        dev = np.asarray(feat.phi_apply(jnp.asarray(xx), params, cfg))
+        parts.append(hashlib.sha256(ref.tobytes()).hexdigest())
+        parts.append(hashlib.sha256(dev.tobytes()).hexdigest())
+    print("|".join(parts))
+""")
+
+
+def _run_determinism_child() -> str:
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", DETERMINISM_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=600)
+    assert res.returncode == 0, res.stderr[-2000:]
+    return res.stdout.strip().splitlines()[-1]
+
+
+def test_phi_deterministic_across_processes():
+    """Every backend (numpy reference AND jnp port) of every Phi kind
+    produces bit-identical features for the same ``FeatureConfig.seed``
+    in two separate processes — Phi is genuinely shared, with no hidden
+    process-local state."""
+    a = _run_determinism_child()
+    b = _run_determinism_child()
+    assert a == b
+    assert len(a.split("|")) == 8
+
+
+class TestTokenSubstrate:
+    """The token data substrate stays deterministic and well-shaped (it
+    feeds the LM-architecture protocol path)."""
+
+    def test_sample_tokens_deterministic(self):
+        spec = tok.TokenTaskSpec(vocab=32, seed=1)
+        a = tok.sample_tokens(spec, 64, seed=3)
+        b = tok.sample_tokens(spec, 64, seed=3)
+        np.testing.assert_array_equal(a, b)
+        assert a.shape == (64,) and a.min() >= 0 and a.max() < 32
+
+    def test_token_features_shape(self):
+        spec = tok.TokenTaskSpec(vocab=32, seed=1)
+        toks = tok.sample_tokens(spec, 129, seed=0)
+        f = tok.token_features(toks, d=16, window=8, vocab=32)
+        assert f.shape == (128 // 8, 16)
+        assert np.isfinite(f).all()
+
+    def test_batch_iterator_yields_lm_batches(self):
+        it = tok.token_batch_iterator(tok.TokenTaskSpec(vocab=16, seed=2),
+                                      batch=2, seq_len=8)
+        batch = next(it)
+        assert batch["tokens"].shape == (2, 8)
+        assert batch["labels"].shape == (2, 8)
+        np.testing.assert_array_equal(batch["tokens"][:, 1:],
+                                      batch["labels"][:, :-1])

@@ -7,6 +7,8 @@ import pytest
 
 from repro.kernels.eigproject import ops as proj_ops
 from repro.kernels.eigproject.ref import project_norms_ref
+from repro.kernels.featurize_gram import ops as fg_ops
+from repro.kernels.featurize_gram.ref import featurize_gram_ref
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention.ref import flash_ref
 from repro.kernels.gram import ops as gram_ops
@@ -104,6 +106,74 @@ class TestGramProjectKernel:
         v = jnp.zeros((32, 8), jnp.float32)
         out = gp_ops.gram_project(x, v, interpret=True)
         np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+
+
+class TestFeaturizeGramKernel:
+    """Fused featurize -> Gram: (X W)^T (X W) without the (n, d) feature
+    matrix in HBM — the raw-ingest SignatureEngine's Eq.-1 hot path."""
+
+    @pytest.mark.parametrize("n,m,d", [(128, 128, 128), (256, 512, 256),
+                                       (100, 96, 40), (130, 300, 72),
+                                       (64, 40, 12)])
+    def test_allclose_sweep_fp32(self, n, m, d):
+        rng = np.random.default_rng(n * 3 + m + d)
+        x = jnp.asarray(rng.standard_normal((n, m)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((m, d)) / np.sqrt(d),
+                        jnp.float32)
+        out = fg_ops.featurize_gram(x, w, interpret=True)
+        ref = featurize_gram_ref(x, w)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_bf16_compute_fp32_accumulate(self):
+        rng = np.random.default_rng(9)
+        x = jnp.asarray(rng.standard_normal((256, 200)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((200, 64)) / 8.0, jnp.float32)
+        out = fg_ops.featurize_gram(x, w, compute_dtype="bf16",
+                                    interpret=True)
+        ref = np.asarray(featurize_gram_ref(x, w))
+        assert out.dtype == jnp.float32
+        scale = np.abs(ref).max()
+        assert np.abs(np.asarray(out) - ref).max() / scale < 2e-2
+
+    def test_matches_unfused_gram_of_features(self):
+        """Fused == project with jnp, then the plain gram kernel."""
+        rng = np.random.default_rng(4)
+        x = jnp.asarray(rng.standard_normal((96, 80)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((80, 32)), jnp.float32)
+        fused = fg_ops.featurize_gram(x, w, interpret=True)
+        two_stage = gram_ops.gram_matrix(x @ w, interpret=True)
+        np.testing.assert_allclose(np.asarray(fused),
+                                   np.asarray(two_stage),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_zero_row_padding_exact(self):
+        """Zero rows (ragged padding) contribute nothing to the Gram."""
+        rng = np.random.default_rng(5)
+        x = rng.standard_normal((40, 48)).astype(np.float32)
+        padded = np.zeros((64, 48), np.float32)
+        padded[:40] = x
+        w = jnp.asarray(rng.standard_normal((48, 16)), jnp.float32)
+        out_pad = fg_ops.featurize_gram(jnp.asarray(padded), w,
+                                        interpret=True)
+        out_true = fg_ops.featurize_gram(jnp.asarray(x), w, interpret=True)
+        np.testing.assert_allclose(np.asarray(out_pad),
+                                   np.asarray(out_true),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_symmetry_and_psd(self):
+        rng = np.random.default_rng(6)
+        x = jnp.asarray(rng.standard_normal((128, 64)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((64, 24)), jnp.float32)
+        g = np.asarray(fg_ops.featurize_gram(x, w, interpret=True))
+        np.testing.assert_allclose(g, g.T, atol=1e-4)
+        assert np.linalg.eigvalsh(g).min() > -1e-3
+
+    def test_bad_compute_dtype_rejected(self):
+        x = jnp.zeros((8, 8), jnp.float32)
+        w = jnp.zeros((8, 4), jnp.float32)
+        with pytest.raises(ValueError, match="compute_dtype"):
+            fg_ops.featurize_gram(x, w, compute_dtype="fp16")
 
 
 class TestFlashAttentionKernel:

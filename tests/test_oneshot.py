@@ -112,8 +112,8 @@ class TestFeatureMaps:
     def test_pca(self, rng):
         probe = rng.standard_normal((100, 50)).astype(np.float32)
         x = rng.standard_normal((20, 50)).astype(np.float32)
-        out = feat.feature_map(x, feat.FeatureConfig(kind="pca", d=8,
-                                                     probe=probe))
+        out = feat.feature_map(x, feat.FeatureConfig(kind="pca", d=8),
+                               probe=probe)
         assert out.shape == (20, 8)
 
     def test_shared_across_users(self, rng):
