@@ -1,0 +1,175 @@
+"""Membership serving benchmark: batched assignment vs protocol re-run.
+
+Without the ``MembershipEngine``, a wave of newcomers forces the GPS to
+re-run the whole one-shot protocol (O(N^2) pair work + HAC) over
+seed+newcomers.  With it, the wave is one batched directory lookup —
+O(T * k * d^2) per arrival, independent of the table size N.
+
+Grid: table sizes N in {1024, 4096, 8192} (``--quick``: 256 only), waves
+of 64 newcomers from the same task mixture.  At every point:
+
+  * baseline  — ``one_shot_clustering`` over seed+wave (the blockwise
+    streaming engine + device NN-chain HAC: the FASTEST full re-run this
+    repo has), timed cold (with its shape-change compiles — what a
+    growing population pays every wave) AND warm (pure compute — the
+    number the speedup uses);
+  * assign    — ``MembershipEngine.assign`` on the wave, numpy / jnp
+    backends timed (pallas timed at the smallest point only — off-TPU it
+    executes in interpret mode, which measures the interpreter);
+  * agreement — all three backends must produce IDENTICAL labels
+    (margins are asserted well clear of bf16 tie dither);
+  * accuracy  — assignment labels must match a full re-cluster of
+    seed+wave on >= 95% of arrivals (cluster ids aligned by seed-user
+    majority overlap).
+
+Acceptance (ISSUE 5): >= 20x (floor 5x) assignment speedup vs the re-run
+baseline per 64-newcomer wave at N=4096 on CPU, recorded in the JSON
+written to ``--json``.
+
+Standalone: ``PYTHONPATH=src:. python benchmarks/bench_membership.py --quick``
+(CI smoke: N=256, same code paths, agreement + match still asserted).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import oneshot
+from repro.core.cluster_engine import ClusterConfig
+from repro.core.engine import ProtocolEngine
+from repro.core.membership_engine import MembershipConfig, MembershipEngine
+from repro.core.similarity import SimilarityConfig
+from repro.data import synthetic as syn
+
+WAVE = 64
+D = 32
+SAMPLES = 16
+TASKS = 8
+TOP_K = 8
+BACKENDS = ("numpy", "jnp", "pallas")
+
+
+def _match_vs_full(seed_labels, full_labels, assign_labels, n: int
+                   ) -> float:
+    """Fraction of the wave where assignment agrees with the full
+    re-cluster, after aligning the re-cluster's arbitrary cluster ids to
+    the seed directory's by majority overlap on the seed users."""
+    mapping = np.full(TASKS, -1)
+    for t in range(TASKS):
+        members = seed_labels[full_labels[:n] == t]
+        if len(members):
+            mapping[t] = np.bincount(members).argmax()
+    return float((mapping[full_labels[n:]] == assign_labels).mean())
+
+
+def bench_point(n: int, run_pallas: bool) -> tuple[list[str], dict]:
+    feats, _ = syn.make_task_feature_mixture(n + WAVE, SAMPLES, D, TASKS,
+                                             seed=0)
+    block = 256 if n > 512 else 0
+    cfg = SimilarityConfig(top_k=TOP_K, block_users=block)
+    ccfg = ClusterConfig(backend="jnp")
+
+    res = oneshot.one_shot_clustering(feats[:n], TASKS, cfg=cfg,
+                                      cluster_cfg=ccfg)
+    seed_labels = np.asarray(jax.block_until_ready(res.labels))
+
+    # Baseline: the newcomers arrive, the GPS re-runs everything.  Timed
+    # twice — the first run pays the N+64-shape jit compiles (what a
+    # growing population pays EVERY wave), the second is pure compute;
+    # the acceptance speedup uses the warm number so it never conflates
+    # compile cost with the O(N^2)-vs-O(T k d^2) claim.
+    baseline = []
+    for _ in range(2):
+        t0 = time.perf_counter()
+        res_full = oneshot.one_shot_clustering(feats, TASKS, cfg=cfg,
+                                               cluster_cfg=ccfg)
+        full_labels = np.asarray(jax.block_until_ready(res_full.labels))
+        baseline.append(time.perf_counter() - t0)
+    baseline_cold_s, baseline_s = baseline
+
+    # The wave's signatures (what each newcomer uploads anyway).
+    lam_w, v_w, _ = ProtocolEngine(
+        SimilarityConfig(top_k=TOP_K)).signatures(feats[n:])
+
+    labels_by, times = {}, {}
+    for backend in BACKENDS:
+        if backend == "pallas" and not run_pallas:
+            eng = MembershipEngine.from_oneshot(
+                res, MembershipConfig(backend=backend))
+            labels_by[backend] = np.asarray(eng.assign(lam_w, v_w).labels)
+            continue
+        eng = MembershipEngine.from_oneshot(
+            res, MembershipConfig(backend=backend))
+        out = eng.assign(lam_w, v_w)                        # warm / compile
+        if backend != "numpy":
+            jax.block_until_ready(out.labels)
+        n_iter = 1 if backend == "pallas" else 10
+        t0 = time.perf_counter()
+        for _ in range(n_iter):
+            out = eng.assign(lam_w, v_w)
+            if backend != "numpy":
+                jax.block_until_ready(out.labels)
+        times[backend] = (time.perf_counter() - t0) / n_iter
+        labels_by[backend] = np.asarray(out.labels)
+
+    for backend in BACKENDS[1:]:
+        assert (labels_by[backend] == labels_by["numpy"]).all(), (
+            f"{backend}/numpy assignment disagree at N={n}")
+    match = _match_vs_full(seed_labels, full_labels, labels_by["jnp"], n)
+    assert match >= 0.95, (
+        f"assignment vs full re-cluster match {match:.1%} < 95% at N={n}")
+
+    assign_s = times["jnp"]
+    rec = {
+        "N": n, "wave": WAVE, "d": D, "top_k": TOP_K, "tasks": TASKS,
+        "baseline_rerun_s": round(baseline_s, 4),
+        "baseline_rerun_cold_s": round(baseline_cold_s, 4),
+        "assign_numpy_s": round(times["numpy"], 6),
+        "assign_jnp_s": round(assign_s, 6),
+        "assignments_per_s": round(WAVE / assign_s, 1),
+        "speedup_vs_rerun": round(baseline_s / assign_s, 1),
+        "match_vs_full_recluster": match,
+        "backends_agree": True,
+    }
+    if run_pallas:
+        rec["assign_pallas_s"] = round(times["pallas"], 6)
+        rec["pallas_interpret"] = jax.default_backend() != "tpu"
+    rows = [common.row(
+        f"membership_assign_N{n}", assign_s * 1e6,
+        baseline_us=round(baseline_s * 1e6, 1),
+        speedup_vs_rerun=rec["speedup_vs_rerun"],
+        assignments_per_s=rec["assignments_per_s"],
+        match=match)]
+    return rows, rec
+
+
+def run(quick: bool = False, json_path: str | None = None) -> list[str]:
+    grid = [256] if quick else [1024, 4096, 8192]
+    on_tpu = jax.default_backend() == "tpu"
+    rows, records = [], []
+    for n in grid:
+        r, rec = bench_point(n, run_pallas=(n == grid[0] or on_tpu))
+        rows.extend(r)
+        records.append(rec)
+        jax.clear_caches()
+    payload = {"quick": quick, "backend": jax.default_backend(),
+               "grid": records}
+    if json_path:
+        common.record_result(json_path, payload)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: N=256 only, same code paths")
+    ap.add_argument("--json",
+                    default="benchmarks/results/bench_membership.json",
+                    help="where to record the speedup grid")
+    args = ap.parse_args()
+    for r in run(quick=args.quick, json_path=args.json):
+        print(r, flush=True)

@@ -20,16 +20,17 @@ import time
 
 SUITES = ["table1", "table2", "fig2", "fig3", "fig4", "comm", "ifca",
           "robustness", "kernels", "clustering", "signature", "pipeline",
-          "roofline"]
+          "membership", "roofline"]
 
 
 def run_suite(name: str, seeds: int) -> list[str]:
     from benchmarks import (bench_clustering, bench_comm_cost,
                             bench_fig2_cifar, bench_fig3_fmnist,
                             bench_fig4_eigvectors, bench_ifca,
-                            bench_kernels, bench_pipeline,
-                            bench_robustness, bench_roofline,
-                            bench_signature, bench_table1_similarity,
+                            bench_kernels, bench_membership,
+                            bench_pipeline, bench_robustness,
+                            bench_roofline, bench_signature,
+                            bench_table1_similarity,
                             bench_table2_crossdataset)
 
     s = tuple(range(seeds))
@@ -50,6 +51,9 @@ def run_suite(name: str, seeds: int) -> list[str]:
         # pipeline) run standalone — the harness smokes the code paths
         "signature": lambda: bench_signature.run(quick=True),
         "pipeline": lambda: bench_pipeline.run(quick=True),
+        # likewise: the full acceptance grid (N up to 8192 table sizes,
+        # re-run baselines) runs standalone
+        "membership": lambda: bench_membership.run(quick=True),
         "roofline": lambda: bench_roofline.run(),
     }
     return fns[name]()

@@ -8,6 +8,7 @@ communication ledger.
     PYTHONPATH=src python examples/quickstart.py
     PYTHONPATH=src python examples/quickstart.py --cluster-backend jnp
     PYTHONPATH=src python examples/quickstart.py --host-ingest
+    PYTHONPATH=src python examples/quickstart.py --arrivals 4
 """
 import argparse
 
@@ -16,7 +17,8 @@ import numpy as np
 from repro.core import clustering as clu
 from repro.core import oneshot
 from repro.core.cluster_engine import ClusterConfig
-from repro.core.signature_engine import SignatureConfig
+from repro.core.membership_engine import MembershipConfig, MembershipEngine
+from repro.core.signature_engine import SignatureConfig, SignatureEngine
 from repro.core.similarity import SimilarityConfig
 from repro.data import features as feat
 from repro.data import partition as dpart
@@ -31,6 +33,10 @@ def main():
     ap.add_argument("--host-ingest", action="store_true",
                     help="featurize per user with host numpy (the pre-PR-4 "
                          "path) instead of the device SignatureEngine")
+    ap.add_argument("--arrivals", type=int, default=0, metavar="B",
+                    help="serve B streaming newcomers AFTER the one-shot "
+                         "round via the MembershipEngine cluster directory "
+                         "(no protocol re-run)")
     args = ap.parse_args()
 
     # 10 users, 2 tasks (vehicles / animals), 10% minority labels.
@@ -70,6 +76,32 @@ def main():
     print("\nCommunication ledger (one-shot, before any training):")
     for k, v in res.ledger.summary().items():
         print(f"  {k}: {v}")
+
+    if args.arrivals:
+        # Streaming arrivals: newcomers who missed the one-shot round.
+        # Their cluster identity comes from the directory the GPS kept —
+        # one (k x d) signature upload, one label download, no re-run.
+        newcomers = dpart.paper_cifar_two_task(
+            n_per_user=400, seed=1,
+            users_per_task=(args.arrivals - args.arrivals // 2,
+                            args.arrivals // 2))
+        sig_engine = SignatureEngine(fc, SignatureConfig(chunk_rows=128))
+        lam_w, v_w, _ = sig_engine.signatures(
+            [u.x for u in newcomers], top_k=8)
+        engine = MembershipEngine.from_oneshot(res, MembershipConfig(
+            backend="numpy" if args.cluster_backend == "numpy" else "jnp"))
+        out = engine.assign(lam_w, v_w)
+        engine.admit(lam_w, v_w, out.labels)
+        print(f"\nStreaming arrivals ({args.arrivals} newcomers, no "
+              f"protocol re-run):")
+        for u, l, m in zip(newcomers, np.asarray(out.labels),
+                           np.asarray(out.margin)):
+            print(f"  newcomer task {u.task_id} -> cluster {l} "
+                  f"(margin {m:.3f})")
+        led = res.ledger
+        print(f"arrival upload {led.assign_upload} B vs protocol "
+              f"per-user upload {led.per_user_upload} B; download "
+              f"{led.assign_download} B (one label)")
 
 
 if __name__ == "__main__":

@@ -2,19 +2,20 @@
 
 Shows the serve path the dry-run lowers at production scale (decode_32k /
 long_500k): teacher-forced prefill fills the cache, then serve_step
-generates tokens one at a time (greedy).
+generates tokens one at a time (greedy).  The loop itself is the shared
+``repro.launch.decode_loop.greedy_decode`` — the same one
+``launch/serve.py`` drives.
 
     PYTHONPATH=src python examples/serve_demo.py --arch granite_8b \
         --batch 4 --gen 16
     PYTHONPATH=src python examples/serve_demo.py --arch rwkv6_1_6b
 """
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import get_arch
+from repro.launch.decode_loop import greedy_decode
 from repro.models.registry import get_model
 
 
@@ -34,29 +35,11 @@ def main():
     prompt = jax.random.randint(jax.random.PRNGKey(1),
                                 (args.batch, args.prompt_len), 0, cfg.vocab)
 
-    # Prefill: feed the prompt token-by-token through the cache (a blocked
-    # prefill kernel would batch this on TPU; the contract is identical).
-    state = m.init_decode_state(args.batch, args.prompt_len + args.gen)
-    step = jax.jit(m.decode_step)
-    t0 = time.time()
-    logits = None
-    for t in range(args.prompt_len):
-        logits, state = step(params, prompt[:, t:t + 1], state)
-    print(f"prefill {args.prompt_len} tokens: {time.time() - t0:.2f}s")
-
-    # Greedy decode.
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    out = [tok]
-    t0 = time.time()
-    for _ in range(args.gen - 1):
-        logits, state = step(params, tok, state)
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        out.append(tok)
-    dt = time.time() - t0
-    gen = jnp.concatenate(out, axis=1)
+    stats = greedy_decode(m, params, prompt, args.gen)
+    print(f"prefill {args.prompt_len} tokens: {stats.prefill_s:.2f}s")
     print(f"generated {args.gen} tokens x {args.batch} seqs "
-          f"in {dt:.2f}s ({args.batch * args.gen / max(dt, 1e-9):.1f} tok/s)")
-    print("sample:", gen[0].tolist())
+          f"in {stats.decode_s:.2f}s ({stats.tok_per_s:.1f} tok/s)")
+    print("sample:", stats.tokens[0].tolist())
 
 
 if __name__ == "__main__":

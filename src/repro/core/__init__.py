@@ -15,3 +15,7 @@ from repro.core.clustering import (hac, cut, hac_clusters, random_clusters,
 from repro.core.cluster_engine import (ClusterConfig, ClusterEngine,
                                        DeviceDendrogram, CLUSTER_BACKENDS)
 from repro.core.oneshot import one_shot_clustering, OneShotResult, CommLedger
+from repro.core.membership_engine import (MembershipConfig, MembershipEngine,
+                                          MembershipState, AssignResult,
+                                          MEMBERSHIP_BACKENDS,
+                                          signature_relevance)

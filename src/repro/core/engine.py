@@ -59,13 +59,21 @@ def make_user_mesh(axis_name: str = "data") -> Mesh:
 
 @dataclasses.dataclass(frozen=True)
 class ProtocolResult:
-    """Everything the protocol produces before clustering."""
+    """Everything the protocol produces before clustering.
+
+    ``lam``/``v`` are the shared per-user signatures (what each user
+    uploaded) — every backend returns them so the serving layer
+    (``core.membership_engine``) can build its cluster directory without
+    re-running any protocol stage.
+    """
 
     relevance: jax.Array          # (N, N) directed r(i, j)
     similarity: jax.Array         # (N, N) symmetrized R
     n_users: int
     d: int
     top_k: int
+    lam: jax.Array | None = None  # (N, k) shared spectra
+    v: jax.Array | None = None    # (N, d, k) shared eigenvectors
 
 
 # ---------------------------------------------------------------------------
@@ -77,7 +85,7 @@ def _dense_protocol(features, n_valid, top_k, eig_floor, impl):
     grams = sim.batched_gram(features, n_valid, impl=impl)
     lam, v = jax.vmap(lambda g: sim.spectrum(g, top_k))(grams)
     r = sim.relevance_matrix(grams, lam, v, eig_floor, impl=impl)
-    return r, sim.symmetrize(r)
+    return r, sim.symmetrize(r), lam, v
 
 
 # ---------------------------------------------------------------------------
@@ -136,8 +144,11 @@ def _sharded_protocol(features, n_valid, *, axis: str, top_k: int,
     grams = sim.batched_gram(features, n_valid, impl=impl)        # (Nl,d,d)
     lam, v = jax.vmap(lambda g: sim.spectrum(g, top_k))(grams)
 
-    # Phase 2: signature exchange == paper's "share V_i".
+    # Phase 2: signature exchange == paper's "share V_i".  The spectra
+    # ride along (tiny (Nl, k) blocks) so the GPS-side serving directory
+    # can be built straight from the gathered signatures.
     v_all = jax.lax.all_gather(v, axis, tiled=True)               # (N, d, k)
+    lam_all = jax.lax.all_gather(lam, axis, tiled=True)           # (N, k)
 
     # Phase 3: local relevance rows — row i uses MY gram + spectrum
     # against EVERY user's eigenvectors (Algorithm 2 lines 7-12).
@@ -146,7 +157,7 @@ def _sharded_protocol(features, n_valid, *, axis: str, top_k: int,
 
     # Phase 4: GPS assembly == all_gather of rows + symmetrize.
     r_full = jax.lax.all_gather(r_rows, axis, tiled=True)         # (N, N)
-    return r_full, sim.symmetrize(r_full)
+    return r_full, sim.symmetrize(r_full), lam_all, v_all
 
 
 # ---------------------------------------------------------------------------
@@ -157,15 +168,15 @@ def _sharded_protocol(features, n_valid, *, axis: str, top_k: int,
                                    "oversample", "check"))
 def _raw_finish(grams, top_k, eig_floor, impl, eig, iters, oversample,
                 check):
-    """Gram stack -> (r, R, resid) in one jit: top-k spectrum (subspace
-    iteration by default — no O(d^3) eigh) + relevance + symmetrize.
-    The per-user eigen-residual is only computed when the caller will
-    ``check`` it (``resid`` is ``None`` otherwise)."""
+    """Gram stack -> (r, R, resid, lam, v) in one jit: top-k spectrum
+    (subspace iteration by default — no O(d^3) eigh) + relevance +
+    symmetrize.  The per-user eigen-residual is only computed when the
+    caller will ``check`` it (``resid`` is ``None`` otherwise)."""
     lam, v = sig.topk_spectrum(grams, top_k, method=eig, iters=iters,
                                oversample=oversample)
     resid = sig.subspace_residual(grams, lam, v) if check else None
     r = sim.relevance_matrix(grams, lam, v, eig_floor, impl=impl)
-    return r, sim.symmetrize(r), resid
+    return r, sim.symmetrize(r), resid, lam, v
 
 
 def _sharded_raw_protocol(x, nv, *, axis: str, engine, top_k: int,
@@ -181,14 +192,17 @@ def _sharded_raw_protocol(x, nv, *, axis: str, engine, top_k: int,
                                iters=engine.cfg.subspace_iters,
                                oversample=engine.cfg.oversample)
     v_all = jax.lax.all_gather(v, axis, tiled=True)               # (N, d, k)
+    lam_all = jax.lax.all_gather(lam, axis, tiled=True)           # (N, k)
     r_rows = sim.relevance_matrix(grams, lam, v_all, eig_floor,
                                   impl=impl)                      # (Nl, N)
     r_full = jax.lax.all_gather(r_rows, axis, tiled=True)         # (N, N)
     if engine.cfg.check:
         resid = sig.subspace_residual(grams, lam, v)              # (Nl,)
-        return r_full, sim.symmetrize(r_full), jax.lax.all_gather(
-            resid, axis, tiled=True)
-    return r_full, sim.symmetrize(r_full), jnp.zeros((0,), jnp.float32)
+        return (r_full, sim.symmetrize(r_full),
+                jax.lax.all_gather(resid, axis, tiled=True),
+                lam_all, v_all)
+    return (r_full, sim.symmetrize(r_full), jnp.zeros((0,), jnp.float32),
+            lam_all, v_all)
 
 
 # ---------------------------------------------------------------------------
@@ -267,7 +281,7 @@ class ProtocolEngine:
                                  ) -> tuple[jax.Array, jax.Array]:
         """Run the full protocol -> ``(r (N, N) directed, R symmetrized)``."""
         feats, nv = self.prepare(features, n_valid)
-        return self._dispatch(feats, nv)
+        return self._dispatch(feats, nv)[:2]
 
     def similarity(self, features, n_valid=None) -> jax.Array:
         """``R (N, N)`` — the matrix the GPS feeds to HAC."""
@@ -275,10 +289,11 @@ class ProtocolEngine:
 
     def run(self, features, n_valid=None) -> ProtocolResult:
         feats, nv = self.prepare(features, n_valid)
-        r, big_r = self._dispatch(feats, nv)
+        r, big_r, lam, v = self._dispatch(feats, nv)
         n_users, _, d = feats.shape
         return ProtocolResult(relevance=r, similarity=big_r,
-                              n_users=n_users, d=d, top_k=self._top_k(d))
+                              n_users=n_users, d=d, top_k=self._top_k(d),
+                              lam=lam, v=v)
 
     # -- raw-data entry point ----------------------------------------------
 
@@ -331,19 +346,19 @@ class ProtocolEngine:
         d_out = engine.out_dim(m)
         top_k = self._top_k(d_out)
         if self.cfg.backend == "shard_map":
-            r, big_r, resid = self._run_raw_shard_map(engine, raw, nv,
-                                                      top_k, full)
+            r, big_r, resid, lam, v = self._run_raw_shard_map(
+                engine, raw, nv, top_k, full)
         else:
             grams = engine.accumulate_grams(raw, nv, assume_full=full)
-            r, big_r, resid = _raw_finish(grams, top_k, self.cfg.eig_floor,
-                                          self.impl, engine.cfg.eig,
-                                          engine.cfg.subspace_iters,
-                                          engine.cfg.oversample,
-                                          engine.cfg.check)
+            r, big_r, resid, lam, v = _raw_finish(
+                grams, top_k, self.cfg.eig_floor, self.impl,
+                engine.cfg.eig, engine.cfg.subspace_iters,
+                engine.cfg.oversample, engine.cfg.check)
         if engine.cfg.check:
             engine.verify_convergence(resid)
         return ProtocolResult(relevance=r, similarity=big_r,
-                              n_users=n_users, d=d_out, top_k=top_k)
+                              n_users=n_users, d=d_out, top_k=top_k,
+                              lam=lam, v=v)
 
     def similarity_from_raw(self, raw, feature_cfg, n_valid=None,
                             probe=None, signature_cfg=None) -> jax.Array:
@@ -352,8 +367,7 @@ class ProtocolEngine:
                             signature_cfg=signature_cfg).similarity
 
     def _run_raw_shard_map(self, engine, raw, nv, top_k: int,
-                           assume_full: bool = False
-                           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+                           assume_full: bool = False):
         axis = self.cfg.mesh_axis
         mesh = self.mesh or make_user_mesh(axis)
         n_users = raw.shape[0]
@@ -369,16 +383,17 @@ class ProtocolEngine:
         spec_in = P(axis)
         fn = shard_map(body, mesh=mesh,
                        in_specs=(spec_in, spec_in),
-                       out_specs=(P(), P(), P()), check_rep=False)
+                       out_specs=(P(), P(), P(), P(), P()),
+                       check_rep=False)
         with mesh:
             raw = jax.device_put(jnp.asarray(raw),
                                  NamedSharding(mesh, P(axis)))
             nv = jax.device_put(nv, NamedSharding(mesh, P(axis)))
             return jax.jit(fn)(raw, nv)
 
-    def _dispatch(self, feats: jax.Array, nv: jax.Array
-                  ) -> tuple[jax.Array, jax.Array]:
-        """Backend dispatch on already-``prepare``d inputs."""
+    def _dispatch(self, feats: jax.Array, nv: jax.Array):
+        """Backend dispatch on already-``prepare``d inputs ->
+        ``(r, R, lam, v)``."""
         if self.cfg.backend == "shard_map":
             return self._run_shard_map(feats, nv)
         if self.cfg.block_users:
@@ -388,8 +403,7 @@ class ProtocolEngine:
 
     # -- backends -----------------------------------------------------------
 
-    def _run_blockwise(self, feats: jax.Array, nv: jax.Array
-                       ) -> tuple[jax.Array, jax.Array]:
+    def _run_blockwise(self, feats: jax.Array, nv: jax.Array):
         n_users, n, d = feats.shape
         block = min(self.cfg.block_users, n_users)
         top_k = self._top_k(d)
@@ -423,10 +437,9 @@ class ProtocolEngine:
                                    lam_all[s:s + block], v_flat,
                                    self.cfg.eig_floor, top_k, self.impl))
         r = jnp.concatenate(rows)[:n_users, :n_users]
-        return r, sim.symmetrize(r)
+        return (r, sim.symmetrize(r), lam_all[:n_users], v_all[:n_users])
 
-    def _run_shard_map(self, feats: jax.Array, nv: jax.Array
-                       ) -> tuple[jax.Array, jax.Array]:
+    def _run_shard_map(self, feats: jax.Array, nv: jax.Array):
         axis = self.cfg.mesh_axis
         mesh = self.mesh or make_user_mesh(axis)
         n_users = feats.shape[0]
@@ -441,7 +454,7 @@ class ProtocolEngine:
         spec_in = P(axis)
         fn = shard_map(body, mesh=mesh,
                        in_specs=(spec_in, spec_in),
-                       out_specs=(P(), P()),       # replicated (r, R)
+                       out_specs=(P(), P(), P(), P()),  # replicated
                        check_rep=False)
         with mesh:
             feats = jax.device_put(feats, NamedSharding(mesh, P(axis)))

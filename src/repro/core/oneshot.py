@@ -59,6 +59,14 @@ class CommLedger:
     clustering would upload per user for a ``model_params``-weight model —
     the literature baseline the paper contrasts against (its Fig. 4
     point).
+
+    ARRIVAL ACCOUNTING (``core.membership_engine`` serving): a newcomer
+    joining AFTER the one-shot round uploads exactly one ``(k x d)``
+    signature block (``assign_upload`` — no relevance row: the GPS scores
+    it against its cluster directory) and downloads one ``int32`` label
+    (``assign_download`` — no signature-table broadcast).  Arrival cost
+    is independent of the population N, unlike ``per_user_upload``, which
+    carries the O(N) relevance row.
     """
 
     n_users: int
@@ -92,6 +100,17 @@ class CommLedger:
         return self.dtype_bytes * (self.n_users - 1) * self.top_k * self.d
 
     @property
+    def assign_upload(self) -> int:
+        """One newcomer's arrival upload: its ``(k x d)`` signature."""
+        return self.dtype_bytes * self.top_k * self.d
+
+    @property
+    def assign_download(self) -> int:
+        """One newcomer's arrival download: a single ``int32`` cluster
+        label — no signature-table or model download."""
+        return 4
+
+    @property
     def gps_total(self) -> int:
         return self.dtype_bytes * self.n_users * self.n_users
 
@@ -108,6 +127,10 @@ class CommLedger:
             "mode": self.mode,
             "per_user_upload_bytes": self.per_user_upload,
             "per_user_download_bytes": self.per_user_download,
+            "assign_upload_bytes": self.assign_upload,
+            "assign_download_bytes": self.assign_download,
+            "assign_vs_protocol_upload_ratio": (
+                self.assign_upload / self.per_user_upload),
             "signature_table_bytes": self.signature_table_bytes,
             "gps_total_bytes": self.gps_total,
             "iterative_per_round_upload_bytes": self.iterative_equiv,
@@ -121,13 +144,21 @@ class CommLedger:
 class OneShotResult:
     """Labels + intermediates.  With a device cluster backend, ``labels``,
     ``similarity`` and ``relevance`` are ``jax.Array``s that never left
-    the accelerator; the numpy backend returns host arrays."""
+    the accelerator; the numpy backend returns host arrays.
+
+    ``lam``/``v`` are the shared per-user signatures — exactly what each
+    user uploaded — kept so the online serving layer
+    (``repro.core.membership_engine.MembershipEngine.from_oneshot``) can
+    seed its cluster directory without re-running the protocol.
+    """
 
     labels: np.ndarray | jax.Array          # (N,) cluster assignment 0..T-1
     similarity: np.ndarray | jax.Array      # (N, N) symmetrized R
     relevance: np.ndarray | jax.Array       # (N, N) directed r(i, j)
     dendrogram: clu.Dendrogram | DeviceDendrogram
     ledger: CommLedger
+    lam: jax.Array | None = None            # (N, k) shared spectra
+    v: jax.Array | None = None              # (N, d, k) shared eigenvectors
 
 
 def one_shot_clustering(features: Sequence[np.ndarray] | jax.Array,
@@ -162,6 +193,12 @@ def one_shot_clustering(features: Sequence[np.ndarray] | jax.Array,
     ``R`` and the labels on-device.  ``linkage`` is honoured when
     ``cluster_cfg`` is not given (back-compat); passing both with
     conflicting linkages raises rather than silently preferring one.
+
+    The result carries the shared signatures (``lam``, ``v``) — feed it
+    to ``repro.core.membership_engine.MembershipEngine.from_oneshot`` to
+    serve STREAMING arrivals afterwards: a newcomer's cluster identity
+    costs one O(T * k * d^2) directory lookup instead of re-running this
+    O(N^2) protocol.
     """
     if (cluster_cfg is not None and linkage != "average"
             and linkage != cluster_cfg.linkage):
@@ -195,4 +232,4 @@ def one_shot_clustering(features: Sequence[np.ndarray] | jax.Array,
         mode="streaming" if engine.cfg.block_users else "broadcast")
     return OneShotResult(labels=labels, similarity=big_r,
                          relevance=relevance, dendrogram=dend,
-                         ledger=ledger)
+                         ledger=ledger, lam=res.lam, v=res.v)

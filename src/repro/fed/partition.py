@@ -16,7 +16,7 @@ PyTree = Any
 PathPred = Callable[[tuple[str, ...]], bool]
 
 __all__ = ["tree_paths", "prefix_predicate", "split_params", "merge_params",
-           "tree_path_map", "stack_layout"]
+           "tree_path_map", "stack_layout", "admit_layout"]
 
 
 def tree_paths(tree: Mapping, prefix: tuple[str, ...] = ()) -> list[tuple[str, ...]]:
@@ -101,6 +101,53 @@ def stack_layout(labels, n_clusters: int, c_max: int | None = None
     mask = jnp.zeros((n_clusters, c_max), jnp.float32)
     mask = mask.at[rows, slot].set(1.0)
     return rows, slot, mask
+
+
+def admit_layout(mask, new_labels, n_clusters: int | None = None
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Warm-start hook: place newly admitted users into an EXISTING
+    ``(T, C_max)`` super-stack layout WITHOUT changing its shape.
+
+    ``_train_fused``'s compiled program is specialized on the static
+    ``(T, C_max)`` stack shape, so arrivals admitted by the
+    ``MembershipEngine`` must slot into the current mask rather than
+    rebuild the layout — ``stack_layout`` on the grown population would
+    generally grow ``C_max`` and force a retrace.  Each new user with
+    label ``l`` takes row ``l``'s rank-th FREE column (stable rank among
+    the wave's same-label users) — holes left by departed users are
+    refilled, so churn does not leak stack columns.  Invalid labels
+    (including the ``-1`` unassigned convention) get the same
+    out-of-range ``(rows == T, slot == C_max)`` sentinel as
+    ``stack_layout``, which per-user scatters drop.  A wave that
+    overflows any row raises — growing the stack is a retrace the caller
+    must opt into explicitly.
+
+    Returns ``(rows (M,), slot (M,), mask (T, C_max))`` — the new users'
+    scatter coordinates plus the updated occupancy mask.
+    """
+    mask = jnp.asarray(mask, jnp.float32)
+    t, c_max = mask.shape
+    if n_clusters is not None and n_clusters != t:
+        raise ValueError(f"n_clusters={n_clusters} != mask rows {t}")
+    labels = jnp.asarray(new_labels, jnp.int32)
+    valid = (labels >= 0) & (labels < t)
+    occ = mask.sum(axis=1).astype(jnp.int32)                   # (T,)
+    onehot = labels[:, None] == jnp.arange(t, dtype=jnp.int32)[None]
+    rank = (jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1)[
+        jnp.arange(labels.shape[0]), jnp.clip(labels, 0, t - 1)]
+    need = int((occ + onehot.sum(axis=0)).max()) if labels.size else 0
+    if need > c_max:
+        raise ValueError(
+            f"admitting this wave needs {need} slots in a row but "
+            f"C_max={c_max} — re-run stack_layout (retrace) to grow")
+    # Stable argsort of each 0/1 row lists its FREE columns first, in
+    # ascending order — free_cols[l, r] is row l's rank-r free column.
+    free_cols = jnp.argsort(mask, axis=1, stable=True).astype(jnp.int32)
+    slot = free_cols[jnp.clip(labels, 0, t - 1),
+                     jnp.clip(rank, 0, c_max - 1)]
+    rows = jnp.where(valid, labels, t).astype(jnp.int32)
+    slot = jnp.where(valid, slot, c_max).astype(jnp.int32)
+    return rows, slot, mask.at[rows, slot].set(1.0)
 
 
 def split_params(params: Mapping, is_common: PathPred

@@ -1,0 +1,119 @@
+"""Fused project + trace + argmax Pallas kernel for cluster assignment.
+
+One newcomer's assignment visits every cluster prototype once:
+
+grid = (T,): each step loads the newcomer's eigenvector block ``V (d, k)``
+(resident across steps) and one prototype ``P_t (d, d)``, computes the
+projection ``P_t V`` on the MXU (bf16 inputs / fp32 accumulation via
+``preferred_element_type`` when ``compute_dtype="bf16"``), contracts it
+against ``V`` on the VPU into the trace ``sum((P_t V) * V)``, and folds
+the scalar into a running (best, second-best, argmax) kept in SMEM.  The
+final step flushes the label and the confidence margin — the ``(T,)``
+affinity row never round-trips through HBM for its reduction.
+
+Tie-breaking matches ``jnp.argmax`` (first index wins): only a strictly
+greater affinity displaces the running best.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+COMPUTE_DTYPES = ("fp32", "bf16")
+
+
+def _kernel(v_ref, p_ref, m_ref, aff_ref, lab_ref, mar_ref,
+            bval_ref, bsec_ref, bidx_ref, *, n_steps: int,
+            compute_dtype: str):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        bval_ref[0] = -jnp.inf
+        bsec_ref[0] = -jnp.inf
+        bidx_ref[0] = 0
+
+    v = v_ref[...]                                       # (d, k) fp32
+    p = p_ref[...]                                       # (d, d) fp32
+    if compute_dtype == "bf16":
+        w = jax.lax.dot_general(
+            p.astype(jnp.bfloat16), v.astype(jnp.bfloat16),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (d, k) fp32 acc
+    else:
+        w = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    a = jnp.sum(w * v)                                   # trace(V^T P V)
+    a = jnp.where(m_ref[t] > 0.5, a, -jnp.inf)
+    aff_ref[t] = a
+
+    prev_best = bval_ref[0]
+
+    @pl.when(a > prev_best)
+    def _new_best():
+        bsec_ref[0] = prev_best
+        bval_ref[0] = a
+        bidx_ref[0] = t
+
+    @pl.when((a <= prev_best) & (a > bsec_ref[0]))
+    def _new_second():
+        bsec_ref[0] = a
+
+    @pl.when(t == n_steps - 1)
+    def _flush():
+        lab_ref[0] = bidx_ref[0]
+        # A one-cluster directory has no runner-up; the margin degenerates
+        # to the affinity itself (matching the reference).
+        mar_ref[0] = (bval_ref[0] if n_steps == 1
+                      else bval_ref[0] - bsec_ref[0])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_clusters", "compute_dtype",
+                                    "interpret"))
+def assign_one_pallas(v: jax.Array, protos_flat: jax.Array,
+                      mask: jax.Array, n_clusters: int,
+                      compute_dtype: str = "bf16", interpret: bool = True
+                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """``v (d, k)``, ``protos_flat (T*d, d)``, ``mask (T,)`` ->
+    ``(affinity (T,) f32 RAW trace, label i32, margin f32 RAW)``.
+
+    ``d`` and ``k`` must be lane multiples (128); ``ops.py`` pads (zero
+    rows/columns leave every trace exact).  Affinities are raw traces —
+    the ``/k`` normalisation is cheap postprocessing in ``ops.py``.
+    """
+    if compute_dtype not in COMPUTE_DTYPES:
+        raise ValueError(f"compute_dtype must be one of {COMPUTE_DTYPES}, "
+                         f"got {compute_dtype!r}")
+    d, k = v.shape
+    if protos_flat.shape != (n_clusters * d, d):
+        raise ValueError(f"bad shapes v={v.shape} "
+                         f"protos_flat={protos_flat.shape} T={n_clusters}")
+    if d % 128 or k % 128:
+        raise ValueError(f"(d, k)={(d, k)} must be lane multiples of 128")
+    grid = (n_clusters,)
+    scalar_spec = pl.BlockSpec(memory_space=pltpu.SMEM)
+    aff, lab, mar = pl.pallas_call(
+        functools.partial(_kernel, n_steps=n_clusters,
+                          compute_dtype=compute_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d, k), lambda t: (0, 0)),
+            pl.BlockSpec((d, d), lambda t: (t, 0)),
+            scalar_spec,
+        ],
+        out_specs=(scalar_spec, scalar_spec, scalar_spec),
+        out_shape=(jax.ShapeDtypeStruct((n_clusters,), jnp.float32),
+                   jax.ShapeDtypeStruct((1,), jnp.int32),
+                   jax.ShapeDtypeStruct((1,), jnp.float32)),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.float32),
+                        pltpu.SMEM((1,), jnp.float32),
+                        pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(v.astype(jnp.float32), protos_flat.astype(jnp.float32),
+      mask.astype(jnp.float32))
+    return aff, lab[0], mar[0]

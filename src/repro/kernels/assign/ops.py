@@ -1,0 +1,48 @@
+"""Public wrapper for the fused assignment kernel: pad + batch + normalize."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.assign.assign import assign_one_pallas
+from repro.kernels.assign.ref import assign_ref  # noqa: F401
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("compute_dtype", "interpret"))
+def assign(v: jax.Array, protos: jax.Array, mask: jax.Array | None = None,
+           compute_dtype: str = "bf16", interpret: bool | None = None
+           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched fused assignment: ``v (B, d, k)``, ``protos (T, d, d)`` ->
+    ``(affinity (B, T), labels (B,) i32, margin (B,))`` — same contract
+    (and ``/k`` normalisation) as ``assign_ref``.
+
+    ``d``/``k`` are zero-padded to lane multiples of 128 (padded rows and
+    columns contribute exactly zero to every trace); the wave rides
+    through ``lax.map``, so the whole wave is ONE dispatch.  ``mask (T,)``
+    marks live clusters (dead ones can never win the argmax).
+    """
+    interpret = (not _is_tpu()) if interpret is None else interpret
+    b, d, k = v.shape
+    t = protos.shape[0]
+    m = (jnp.ones((t,), jnp.float32) if mask is None
+         else mask.astype(jnp.float32))
+    pad_d = (-d) % 128
+    pad_k = (-k) % 128
+    v = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, pad_d), (0, pad_k)))
+    protos_flat = jnp.pad(protos.astype(jnp.float32),
+                          ((0, 0), (0, pad_d), (0, pad_d))
+                          ).reshape(t * (d + pad_d), d + pad_d)
+
+    def one(v_b):
+        return assign_one_pallas(v_b, protos_flat, m, n_clusters=t,
+                                 compute_dtype=compute_dtype,
+                                 interpret=interpret)
+
+    aff, labels, margin = jax.lax.map(one, v)
+    return aff / k, labels, margin / k

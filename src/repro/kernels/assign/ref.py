@@ -1,0 +1,51 @@
+"""jnp oracle for the fused cluster-assignment kernel.
+
+A newcomer's cluster identity is decided from its SHARED signature alone:
+given the cluster directory's prototype projectors ``P_t = mean_{i in t}
+V_i V_i^T`` and the newcomer's top-k eigenvectors ``V_b (d, k)``, the
+affinity is the mean squared alignment of the newcomer's signature
+subspace with the cluster's mean projector,
+
+    a(b, t) = trace(V_b^T P_t V_b) / k  in [0, 1],
+
+maximized over t.  That is O(T * k * d^2) per newcomer — no training
+rounds, no loss probing against T cluster models (IFCA), and no O(N^2)
+protocol re-run.  The fused kernel (``assign.py``) does the batched
+project + trace + argmax in one pass; this module is the fp32 reference.
+
+Tie-breaking matches ``jnp.argmax`` (first index wins).  The margin is
+``best - second_best`` affinity — the confidence statistic the
+``MembershipEngine`` thresholds into the ``unassigned`` bucket; with a
+single cluster it degenerates to the affinity itself.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -jnp.inf
+
+
+def assign_ref(v: jax.Array, protos: jax.Array,
+               mask: jax.Array | None = None
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """``v (B, d, k)``, ``protos (T, d, d)`` -> ``(affinity (B, T),
+    labels (B,) i32, margin (B,))``, all fp32.
+
+    ``mask (T,)`` (bool/float) marks live clusters; dead prototypes get
+    ``-inf`` affinity and can never win the argmax.
+    """
+    v = v.astype(jnp.float32)
+    k = v.shape[-1]
+    aff = jnp.einsum("bdk,tde,bek->bt", v, protos.astype(jnp.float32),
+                     v) / k
+    if mask is not None:
+        aff = jnp.where(mask.astype(bool)[None, :], aff, _NEG)
+    labels = jnp.argmax(aff, axis=1).astype(jnp.int32)
+    best = jnp.max(aff, axis=1)
+    if aff.shape[1] == 1:
+        return aff, labels, best
+    cols = jnp.arange(aff.shape[1], dtype=jnp.int32)
+    second = jnp.max(jnp.where(cols[None, :] == labels[:, None], _NEG, aff),
+                     axis=1)
+    return aff, labels, best - second

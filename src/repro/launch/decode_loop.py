@@ -1,0 +1,61 @@
+"""Shared prefill + greedy KV-cache decode loop.
+
+``launch/serve.py`` and ``examples/serve_demo.py`` both drive the same
+serving contract — teacher-forced prefill fills the cache token by token,
+then ``decode_step`` generates greedily — so the loop lives once, here.
+A blocked prefill kernel would batch the first phase on TPU; the contract
+(and therefore this loop's timings) is identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["DecodeStats", "greedy_decode"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeStats:
+    """One serving run: generated tokens + phase wall-clock."""
+
+    tokens: jax.Array          # (batch, gen) greedy continuations
+    prompt_len: int
+    prefill_s: float
+    decode_s: float
+
+    @property
+    def tok_per_s(self) -> float:
+        b, g = self.tokens.shape
+        return b * g / max(self.decode_s, 1e-9)
+
+
+def greedy_decode(model, params, prompts: jax.Array, gen: int
+                  ) -> DecodeStats:
+    """Prefill ``prompts (batch, prompt_len)`` through a fresh decode
+    state, then generate ``gen`` tokens greedily.  Returns the tokens
+    (the first one is argmax of the last prefill logits) and timings."""
+    batch, prompt_len = prompts.shape
+    state = model.init_decode_state(batch, prompt_len + gen)
+    step = jax.jit(model.decode_step)
+
+    t0 = time.time()
+    logits = None
+    for t in range(prompt_len):
+        logits, state = step(params, prompts[:, t:t + 1], state)
+    jax.block_until_ready(logits)
+    prefill_s = time.time() - t0
+
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for _ in range(gen - 1):
+        logits, state = step(params, tok, state)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    tokens = jnp.concatenate(out, axis=1)
+    jax.block_until_ready(tokens)
+    return DecodeStats(tokens=tokens, prompt_len=prompt_len,
+                       prefill_s=prefill_s, decode_s=time.time() - t0)

@@ -1,0 +1,195 @@
+"""Membership serving launcher: seed protocol -> streaming arrival waves.
+
+Drives the full online lifecycle the ``MembershipEngine`` owns: run the
+one-shot protocol on a seed population, build the cluster directory, then
+stream synthetic arrival waves with churn (evictions) and task drift
+(newcomers from a subspace the seed never saw), reporting per-wave
+assignment accuracy vs the oracle, the unassigned fraction, and every
+drift-triggered re-cluster event:
+
+  # 64 seed users, 6 waves of 16 arrivals, 4 evictions per wave
+  PYTHONPATH=src python -m repro.launch.membership --seed-users 64 \\
+      --waves 6 --wave-size 16 --evict 4
+
+  # drift: from wave 3 on, half of each wave comes from an unseen task
+  PYTHONPATH=src python -m repro.launch.membership --drift-frac 0.5 \\
+      --drift-after 3 --backend jnp
+
+  # fused pallas assignment kernel
+  PYTHONPATH=src python -m repro.launch.membership --backend pallas
+
+The loop also maintains the trainer-side ``(T, C_max)`` super-stack
+layout through ``fed.partition.admit_layout`` — the warm-start hook that
+slots admitted arrivals into the existing stack without retracing the
+fused trainer.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed-users", type=int, default=64)
+    ap.add_argument("--samples", type=int, default=48)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--tasks", type=int, default=4)
+    ap.add_argument("--top-k", type=int, default=8)
+    ap.add_argument("--waves", type=int, default=6)
+    ap.add_argument("--wave-size", type=int, default=16)
+    ap.add_argument("--evict", type=int, default=4,
+                    help="members evicted (churn) after each wave")
+    ap.add_argument("--drift-frac", type=float, default=0.0,
+                    help="fraction of each post --drift-after wave drawn "
+                         "from a task the seed never saw")
+    ap.add_argument("--drift-after", type=int, default=3)
+    ap.add_argument("--backend", default="jnp",
+                    choices=["numpy", "jnp", "pallas"])
+    ap.add_argument("--margin-floor", type=float, default=0.05)
+    ap.add_argument("--unassigned-frac", type=float, default=0.25)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax.numpy as jnp
+
+    from repro.core import clustering as clu
+    from repro.core import oneshot
+    from repro.core.engine import ProtocolEngine
+    from repro.core.membership_engine import (MembershipConfig,
+                                              MembershipEngine)
+    from repro.core.similarity import SimilarityConfig
+    from repro.data import synthetic as syn
+    from repro.fed import partition as fpart
+
+    # One mixture over tasks+1 subspaces: the extra task is the DRIFT
+    # source — it exists in the generator so drift arrivals share its
+    # subspace, but no seed user is drawn from it.
+    n_total = args.seed_users + args.waves * args.wave_size
+    feats_all, tids_all = syn.make_task_feature_mixture(
+        2 * n_total, args.samples, args.dim, args.tasks + 1,
+        seed=args.seed)
+    seed_pool = np.flatnonzero(tids_all < args.tasks)
+    drift_pool = np.flatnonzero(tids_all == args.tasks)
+    seed_idx = seed_pool[:args.seed_users]
+    arrival_pool = seed_pool[args.seed_users:]
+
+    scfg = SimilarityConfig(top_k=args.top_k)
+    t0 = time.time()
+    res = oneshot.one_shot_clustering(jnp.asarray(feats_all[seed_idx]),
+                                      n_clusters=args.tasks, cfg=scfg)
+    seed_labels = np.asarray(res.labels)
+    seed_tasks = tids_all[seed_idx]
+    seed_acc = clu.clustering_accuracy(seed_labels, seed_tasks)
+    print(f"seed: {args.seed_users} users, one-shot protocol + HAC in "
+          f"{time.time() - t0:.2f}s, clustering accuracy {seed_acc:.1%}")
+
+    # cluster id -> oracle task id (majority vote over the seed).
+    task_of_cluster = np.full(args.tasks, -1)
+    for t in range(args.tasks):
+        members = seed_tasks[seed_labels == t]
+        if len(members):
+            task_of_cluster[t] = np.bincount(members).argmax()
+
+    cfg = MembershipConfig(
+        backend=args.backend, margin_floor=args.margin_floor,
+        recluster_unassigned_frac=args.unassigned_frac,
+        capacity=2 * n_total)
+    engine = MembershipEngine.from_oneshot(res, cfg)
+    led = res.ledger
+    print(f"directory: T={engine.state.n_clusters}, capacity "
+          f"{engine.state.capacity}, backend={args.backend} | arrival "
+          f"upload {led.assign_upload / 1024:.1f} KiB vs protocol "
+          f"per-user upload {led.per_user_upload / 1024:.1f} KiB")
+
+    # Trainer-side warm-start layout: headroom for every arrival, so the
+    # (T, C_max) stack shape survives all waves without a retrace.
+    # ``stack_coord`` maps each directory slot to its stack cell so
+    # evictions free their columns and admits refill the holes.
+    c_max = int(np.bincount(seed_labels, minlength=args.tasks).max()) \
+        + args.waves * args.wave_size
+    rows0, slots0, stack_mask = fpart.stack_layout(res.labels, args.tasks,
+                                                   c_max=c_max)
+    stack_shape = stack_mask.shape
+    stack_coord = {i: (int(r), int(c)) for i, (r, c)
+                   in enumerate(zip(np.asarray(rows0), np.asarray(slots0)))}
+
+    sig_engine = ProtocolEngine(scfg)
+    rng = np.random.default_rng(args.seed)
+    live_slots = list(range(args.seed_users))
+    next_arrival = 0
+    for w in range(args.waves):
+        n_drift = (int(args.drift_frac * args.wave_size)
+                   if w >= args.drift_after else 0)
+        take = args.wave_size - n_drift
+        idx = list(arrival_pool[next_arrival:next_arrival + take])
+        next_arrival += take
+        idx += list(rng.choice(drift_pool, n_drift, replace=False))
+        wave_f, wave_t = feats_all[idx], tids_all[idx]
+
+        lam_w, v_w, _ = sig_engine.signatures(jnp.asarray(wave_f))
+        t0 = time.time()
+        out = engine.assign(lam_w, v_w)
+        labels = np.asarray(out.labels)
+        dt = time.time() - t0
+        slots = engine.admit(lam_w, v_w, labels)
+        live_slots.extend(int(s) for s in slots)
+
+        assigned = labels >= 0
+        known = wave_t < args.tasks
+        hits = task_of_cluster[labels[assigned & known]] == \
+            wave_t[assigned & known]
+        acc = hits.mean() if hits.size else float("nan")
+        rows, slot, stack_mask = fpart.admit_layout(stack_mask,
+                                                    jnp.asarray(labels))
+        for s, r, c, lb in zip(slots, np.asarray(rows), np.asarray(slot),
+                               labels):
+            if lb >= 0:                      # unassigned never enter it
+                stack_coord[int(s)] = (int(r), int(c))
+        stats = engine.drift_stats()
+        event = engine.maybe_recluster()
+        if event:
+            # a relabel invalidates the column assignment; rebuild at the
+            # SAME (T, C_max) — shape-stable, so still no retrace (the
+            # trainer must re-scatter its per-user payloads, not
+            # recompile)
+            live = np.asarray(engine.state.valid) \
+                & (np.asarray(engine.state.labels) >= 0)
+            live_idx = np.flatnonzero(live)
+            r2, c2, stack_mask = fpart.stack_layout(
+                jnp.asarray(np.asarray(engine.state.labels)[live_idx]),
+                args.tasks, c_max=c_max)
+            stack_coord = {int(s): (int(r), int(c)) for s, r, c
+                           in zip(live_idx, np.asarray(r2),
+                                  np.asarray(c2))}
+        print(f"wave {w}: {args.wave_size} arrivals "
+              f"({n_drift} drift) assigned in {dt * 1e3:.1f} ms | "
+              f"accuracy {acc:.1%} | unassigned "
+              f"{stats['unassigned_frac']:.1%} | proto shift "
+              f"{stats['proto_shift']:.3f}"
+              + (" | RECLUSTER (stack re-scattered, not retraced)"
+                 if event else ""))
+
+        if args.evict and len(live_slots) > args.evict:
+            gone = rng.choice(len(live_slots), args.evict, replace=False)
+            evicted = [live_slots[g] for g in gone]
+            engine.evict(evicted)
+            for s in evicted:                # free the stack columns too
+                if s in stack_coord:
+                    stack_mask = stack_mask.at[stack_coord.pop(s)].set(0.0)
+            live_slots = [s for i, s in enumerate(live_slots)
+                          if i not in set(gone.tolist())]
+
+    assert stack_mask.shape == stack_shape     # no retrace ever needed
+    n_in_stack = int(np.asarray(stack_mask).sum())
+    final = engine.drift_stats()
+    assert n_in_stack == final["n_members"] - engine.state.n_unassigned
+    print(f"final: {final['n_members']} members ({n_in_stack} in the "
+          f"stack), {final['n_reclusters']} re-cluster events, stack "
+          f"shape {stack_shape} unchanged (fused trainer never retraced)")
+
+
+if __name__ == "__main__":
+    main()

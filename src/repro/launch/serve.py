@@ -6,12 +6,11 @@
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import get_arch
+from repro.launch.decode_loop import greedy_decode
 from repro.models.registry import get_model
 
 
@@ -29,27 +28,14 @@ def main() -> None:
     if m.is_encdec:
         raise SystemExit("decoder-only serving; use examples for enc-dec")
     params = m.init(jax.random.PRNGKey(0))
-    step = jax.jit(m.decode_step)
 
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0, cfg.vocab)
-    state = m.init_decode_state(args.batch, args.prompt_len + args.gen)
-    t0 = time.time()
-    logits = None
-    for t in range(args.prompt_len):
-        logits, state = step(params, prompts[:, t:t + 1], state)
-    print(f"prefill: {args.prompt_len} tok in {time.time() - t0:.2f}s")
-    tokens = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-    out = [tokens]
-    t0 = time.time()
-    for _ in range(args.gen - 1):
-        logits, state = step(params, tokens, state)
-        tokens = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-        out.append(tokens)
-    dt = time.time() - t0
-    print(f"decode: {args.gen} x {args.batch} in {dt:.2f}s "
-          f"({args.batch * args.gen / max(dt, 1e-9):.0f} tok/s)")
-    print("sample:", jnp.concatenate(out, 1)[0].tolist()[:24])
+    stats = greedy_decode(m, params, prompts, args.gen)
+    print(f"prefill: {args.prompt_len} tok in {stats.prefill_s:.2f}s")
+    print(f"decode: {args.gen} x {args.batch} in {stats.decode_s:.2f}s "
+          f"({stats.tok_per_s:.0f} tok/s)")
+    print("sample:", stats.tokens[0].tolist()[:24])
 
 
 if __name__ == "__main__":

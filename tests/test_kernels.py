@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.assign import ops as assign_ops
+from repro.kernels.assign.ref import assign_ref
 from repro.kernels.eigproject import ops as proj_ops
 from repro.kernels.eigproject.ref import project_norms_ref
 from repro.kernels.featurize_gram import ops as fg_ops
@@ -106,6 +108,74 @@ class TestGramProjectKernel:
         v = jnp.zeros((32, 8), jnp.float32)
         out = gp_ops.gram_project(x, v, interpret=True)
         np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+
+
+class TestAssignKernel:
+    """Fused project + trace + argmax: the MembershipEngine's arrival hot
+    path (one pass over the prototype directory per newcomer)."""
+
+    @staticmethod
+    def _case(b, t, d, k, seed=0):
+        rng = np.random.default_rng(seed)
+        v = rng.standard_normal((b, d, k)).astype(np.float32)
+        p = rng.standard_normal((t, d, d)).astype(np.float32)
+        return jnp.asarray(v), jnp.asarray((p + p.transpose(0, 2, 1)) / 2)
+
+    @pytest.mark.parametrize("b,t,d,k", [(4, 3, 16, 6), (8, 8, 32, 8),
+                                         (2, 1, 128, 128), (5, 2, 40, 3)])
+    def test_allclose_sweep_fp32(self, b, t, d, k):
+        v, p = self._case(b, t, d, k, seed=b * 13 + t)
+        aff, lab, mar = assign_ops.assign(v, p, compute_dtype="fp32",
+                                          interpret=True)
+        aff_r, lab_r, mar_r = assign_ref(v, p)
+        np.testing.assert_allclose(np.asarray(aff), np.asarray(aff_r),
+                                   rtol=1e-4, atol=1e-4)
+        assert (np.asarray(lab) == np.asarray(lab_r)).all()
+        np.testing.assert_allclose(np.asarray(mar), np.asarray(mar_r),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_bf16_compute_fp32_accumulate(self):
+        v, p = self._case(6, 4, 64, 8, seed=5)
+        aff, lab, _ = assign_ops.assign(v, p, compute_dtype="bf16",
+                                        interpret=True)
+        aff_r, lab_r, _ = assign_ref(v, p)
+        np.testing.assert_allclose(np.asarray(aff), np.asarray(aff_r),
+                                   rtol=5e-2, atol=5e-2)
+        assert (np.asarray(lab) == np.asarray(lab_r)).all()
+
+    def test_mask_excludes_clusters(self):
+        v, p = self._case(4, 3, 16, 4, seed=9)
+        mask = jnp.asarray([1.0, 0.0, 1.0])
+        aff, lab, _ = assign_ops.assign(v, p, mask, compute_dtype="fp32",
+                                        interpret=True)
+        _, lab_r, _ = assign_ref(v, p, mask)
+        assert not (np.asarray(lab) == 1).any()
+        assert (np.asarray(lab) == np.asarray(lab_r)).all()
+        assert np.isneginf(np.asarray(aff)[:, 1]).all()
+
+    def test_tie_breaks_to_first_index(self):
+        v, p = self._case(3, 1, 16, 4, seed=11)
+        dup = jnp.concatenate([p, p], axis=0)        # identical prototypes
+        _, lab, mar = assign_ops.assign(v, dup, compute_dtype="fp32",
+                                        interpret=True)
+        _, lab_r, mar_r = assign_ref(v, dup)
+        assert (np.asarray(lab) == 0).all()
+        assert (np.asarray(lab_r) == 0).all()
+        np.testing.assert_allclose(np.asarray(mar), 0.0, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(mar_r), 0.0, atol=1e-5)
+
+    def test_single_cluster_margin_is_affinity(self):
+        v, p = self._case(4, 1, 16, 4, seed=2)
+        aff, lab, mar = assign_ops.assign(v, p, compute_dtype="fp32",
+                                          interpret=True)
+        assert (np.asarray(lab) == 0).all()
+        np.testing.assert_allclose(np.asarray(mar),
+                                   np.asarray(aff)[:, 0], atol=1e-5)
+
+    def test_bad_compute_dtype_raises(self):
+        v, p = self._case(1, 1, 16, 4)
+        with pytest.raises(ValueError, match="compute_dtype"):
+            assign_ops.assign(v, p, compute_dtype="fp16", interpret=True)
 
 
 class TestFeaturizeGramKernel:

@@ -85,6 +85,37 @@ class TestCommLedger:
         assert led.per_user_download == 4 * 9 * 5 * 784
         assert led.summary()["oneshot_vs_iterative_ratio"] < 0.04
 
+    def test_arrival_accounting(self):
+        """A streaming newcomer uploads one (k x d) signature and
+        downloads one int32 label — independent of N, unlike the
+        protocol's per-user upload which carries the O(N) relevance row."""
+        led = oneshot.CommLedger(n_users=10, d=784, top_k=5)
+        assert led.assign_upload == 4 * 5 * 784
+        assert led.assign_download == 4
+        assert led.assign_upload == led.per_user_upload - 4 * led.n_users
+        big = oneshot.CommLedger(n_users=100_000, d=784, top_k=5)
+        assert big.assign_upload == led.assign_upload     # N-independent
+        assert big.per_user_upload > led.per_user_upload
+        s = led.summary()
+        assert s["assign_upload_bytes"] == led.assign_upload
+        assert s["assign_download_bytes"] == 4
+        assert s["assign_vs_protocol_upload_ratio"] < 1.0
+
+    def test_arrival_accounting_tracks_dtype(self):
+        fp32 = oneshot.CommLedger(n_users=10, d=64, top_k=8)
+        bf16 = oneshot.CommLedger(n_users=10, d=64, top_k=8,
+                                  dtype_bytes=2)
+        assert bf16.assign_upload == fp32.assign_upload // 2
+        assert bf16.assign_download == fp32.assign_download == 4
+
+    def test_oneshot_result_carries_signatures(self):
+        users = part.paper_fmnist_three_task(seed=0, scale=0.1)
+        res = oneshot.one_shot_clustering(
+            [u.x for u in users], n_clusters=3,
+            cfg=SimilarityConfig(top_k=5))
+        assert res.lam.shape == (len(users), 5)
+        assert res.v.shape == (len(users), 784, 5)
+
     def test_oneshot_cheaper_than_weight_exchange(self):
         users = part.paper_fmnist_three_task(seed=0, scale=0.1)
         res = oneshot.one_shot_clustering(
