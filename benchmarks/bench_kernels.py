@@ -49,6 +49,7 @@ def _bench_gram(rng, quick: bool) -> str:
     return common.row(
         f"kernel_gram_{n}x{d}", ref_us, ref_gflops=round(
             flops / ref_us / 1e3, 2), pallas_validates=ok,
+        pallas_interpret=True,
         arithmetic_intensity=round(flops / (4 * (n * d + d * d)), 1))
 
 
@@ -64,6 +65,7 @@ def _bench_eigproject(rng, quick: bool) -> str:
                           rtol=1e-3, atol=1e-2))
     return common.row(
         f"kernel_eigproject_{d}x{k}", ref_us, pallas_validates=ok,
+        pallas_interpret=True,
         fusion_saving_bytes=4 * d * k)  # the G@V intermediate never hits HBM
 
 
@@ -79,6 +81,7 @@ def _bench_gram_project(rng, quick: bool) -> str:
                           rtol=1e-3, atol=1e-2))
     return common.row(
         f"kernel_gram_project_{n}x{d}x{k}", ref_us, pallas_validates=ok,
+        pallas_interpret=True,
         gram_bytes_never_materialized=4 * d * d)
 
 

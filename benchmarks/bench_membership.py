@@ -134,10 +134,13 @@ def bench_point(n: int, run_pallas: bool) -> tuple[list[str], dict]:
         "speedup_vs_rerun": round(baseline_s / assign_s, 1),
         "match_vs_full_recluster": match,
         "backends_agree": True,
+        # The pallas backend runs on EVERY row (the agreement assert),
+        # timed or not — so every record states the interpret-mode fact.
+        "pallas_interpret": jax.default_backend() != "tpu",
+        "pallas_timed": run_pallas,
     }
     if run_pallas:
         rec["assign_pallas_s"] = round(times["pallas"], 6)
-        rec["pallas_interpret"] = jax.default_backend() != "tpu"
     rows = [common.row(
         f"membership_assign_N{n}", assign_s * 1e6,
         baseline_us=round(baseline_s * 1e6, 1),

@@ -92,6 +92,8 @@ def bench_point(n_users: int, n: int, m: int, d: int, n_tasks: int,
             f"{name} label parity broken at N={n_users}: ARI={ari}")
         rec = {"mode": name, "seconds": round(dt, 4),
                "speedup_vs_host": round(t_host / dt, 2), "parity": True}
+        if sim_backend == "pallas":
+            rec["pallas_interpret"] = jax.default_backend() != "tpu"
         recs.append(rec)
         rows.append(common.row(
             f"pipeline_{name}_N{n_users}", dt * 1e6,

@@ -1,0 +1,238 @@
+"""Scale benchmark: the N=10^3 -> 10^5 one-shot clustering trajectory.
+
+Three routes to labels from the same synthetic multi-task mixture:
+
+  exact        flat ``ProtocolEngine`` (dense or blockwise) + device HAC
+               — O(N^2 d k^2) relevance entries, the O(N^2) wall
+  hierarchical ``core.hierarchy``: G edge groups, vmapped group protocol
+               + HAC, directory compression, signature-only global stage
+               — O(G * (N/G)^2 + (G * T_g)^2)
+  sketched     ``SimilarityConfig.landmarks``: score m landmarks,
+               Nystrom-complete — O(N * m)
+
+Acceptance (ISSUE 6), asserted inline and recorded to ``--json``:
+  * hierarchical completes end-to-end at N=10^5 on a single CPU host;
+    the exact path is not attempted there (the N x N matrix alone is
+    ~40 GB) and is recorded as infeasible with the byte arithmetic.
+  * at N=8192 hierarchical is >= 10x faster than the best exact path
+    (warm wall-clock, best of dense/blockwise), with >= 0.95 label
+    agreement (max of ARI and exact-match after ``greedy_match_labels``
+    id alignment) at EVERY grid point where both routes run.
+  * the sketched path's completion error vs the exact projector-affinity
+    kernel decays monotonically with the landmark count.
+
+Geometry is sized for the trajectory (d=16, k=8, 8 samples/user): small
+enough that 10^5 users fit one host, structured enough that every route
+recovers the task partition.  Pallas is not timed here — this benchmark
+measures protocol SCALING on the jnp route; kernel-level pallas numbers
+live in bench_kernels/bench_clustering (interpret-mode caveats and all).
+
+Standalone: ``PYTHONPATH=src:. python benchmarks/bench_scale.py --quick``
+(CI smoke: N=512, same code paths, agreement + decay still asserted).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import clustering as clu
+from repro.core import oneshot
+from repro.core.cluster_engine import ClusterConfig, ClusterEngine
+from repro.core.engine import ProtocolEngine
+from repro.core.hierarchy import (HierarchyConfig, greedy_match_labels,
+                                  hierarchical_one_shot)
+from repro.core.similarity import SimilarityConfig
+
+D = 16
+TOP_K = 8
+SAMPLES = 8
+TASKS = 4
+
+# N -> (n_groups, group_batch); N_g stays <= 200 so the vmapped group
+# stage never holds more than group_batch * N_g^2 relevance entries.
+HIER_PLAN = {512: (16, 0), 1024: (16, 0), 4096: (64, 0), 8192: (128, 0),
+             100_000: (500, 100)}
+EXACT_MAX_N = 8192            # beyond this the N x N route is not attempted
+SPEEDUP_AT = 8192             # the 10x acceptance point
+AGREEMENT_FLOOR = 0.95
+SPEEDUP_FLOOR = 10.0
+
+
+def _mixture(n: int, seed: int = 0):
+    from repro.data import synthetic as syn
+
+    return syn.make_task_feature_mixture(n, SAMPLES, D, TASKS, seed=seed)
+
+
+def _agreement(labels_a, labels_b) -> dict:
+    a = np.asarray(labels_a)
+    b = np.asarray(labels_b)
+    matched = greedy_match_labels(a, b, TASKS)
+    return {"ari": round(float(clu.adjusted_rand_index(a, b)), 4),
+            "exact_match": round(float((matched == b).mean()), 4)}
+
+
+def _time_exact(feats, mode: str) -> tuple[float, np.ndarray]:
+    """Warm wall-clock of one flat protocol + device-HAC run."""
+    cfg = SimilarityConfig(
+        top_k=TOP_K,
+        block_users=(1024 if mode == "blockwise" else 0))
+
+    def once():
+        res = oneshot.one_shot_clustering(
+            feats, TASKS, cfg=cfg, cluster_cfg=ClusterConfig(backend="jnp"))
+        return jax.block_until_ready(res.labels)
+
+    labels = once()                                          # compile
+    t0 = time.perf_counter()
+    labels = once()
+    return time.perf_counter() - t0, np.asarray(labels)
+
+
+def _time_hier(feats, n: int, warm: bool) -> tuple[float, float, np.ndarray]:
+    """(cold_s, warm_s, labels); cold includes compilation — the honest
+    number for the one-off 10^5 run, where nothing is ever warm."""
+    groups, batch = HIER_PLAN[n]
+    hcfg = HierarchyConfig(n_groups=groups, group_batch=batch)
+
+    def once():
+        res = hierarchical_one_shot(
+            feats, TASKS, cfg=SimilarityConfig(top_k=TOP_K),
+            hierarchy_cfg=hcfg, cluster_cfg=ClusterConfig(backend="jnp"))
+        return jax.block_until_ready(res.labels)
+
+    t0 = time.perf_counter()
+    labels = once()
+    cold = time.perf_counter() - t0
+    warm_s = cold
+    if warm:
+        t0 = time.perf_counter()
+        labels = once()
+        warm_s = time.perf_counter() - t0
+    return cold, warm_s, np.asarray(labels)
+
+
+def _sketch_sweep(n: int, landmark_grid: tuple[int, ...]) -> list[dict]:
+    """Nystrom error vs the exact projector-affinity kernel, per m."""
+    feats, tids = _mixture(n)
+    feats = jnp.asarray(feats, jnp.float32)
+    exact = ProtocolEngine(SimilarityConfig(top_k=TOP_K)).run(feats)
+    v = np.asarray(exact.v)
+    affinity = np.einsum("idk,jdl->ijkl", v, v)
+    affinity = (affinity ** 2).sum((2, 3)) / TOP_K           # (N, N) exact
+    out = []
+    for m in landmark_grid:
+        cfg = SimilarityConfig(top_k=TOP_K, landmarks=m)
+        eng = ProtocolEngine(cfg)
+        jax.block_until_ready(eng.run(feats).similarity)     # compile
+        t0 = time.perf_counter()
+        res = eng.run(feats)
+        jax.block_until_ready(res.similarity)
+        dt = time.perf_counter() - t0
+        err = float(np.abs(np.asarray(res.similarity) - affinity).mean())
+        labels = ClusterEngine(ClusterConfig(backend="jnp")).labels(
+            res.similarity, TASKS)
+        out.append({
+            "N": n, "landmarks": m, "s": round(dt, 4),
+            "mean_abs_err": round(err, 6),
+            "ari_vs_tasks": round(
+                float(clu.adjusted_rand_index(np.asarray(labels), tids)),
+                4)})
+    errs = [r["mean_abs_err"] for r in out]
+    assert all(b <= a + 1e-6 for a, b in zip(errs, errs[1:])), (
+        f"sketched error not monotone in landmarks at N={n}: {errs}")
+    return out
+
+
+def bench_point(n: int, run_exact: bool) -> tuple[list[str], dict]:
+    feats_np, tids = _mixture(n)
+    feats = jnp.asarray(feats_np, jnp.float32)
+    groups, batch = HIER_PLAN[n]
+    cold, warm, hier_labels = _time_hier(feats, n, warm=run_exact)
+    rec = {
+        "N": n, "n_groups": groups, "group_batch": batch,
+        "hier_cold_s": round(cold, 3), "hier_warm_s": round(warm, 3),
+        "hier_ari_vs_tasks": round(
+            float(clu.adjusted_rand_index(hier_labels, tids)), 4),
+    }
+    if run_exact:
+        by_mode = {}
+        for mode in ("dense", "blockwise"):
+            s, exact_labels = _time_exact(feats, mode)
+            by_mode[mode] = (s, exact_labels)
+            rec[f"exact_{mode}_s"] = round(s, 3)
+        best_mode = min(by_mode, key=lambda m: by_mode[m][0])
+        best_s, exact_labels = by_mode[best_mode]
+        agree = _agreement(hier_labels, exact_labels)
+        speedup = best_s / warm
+        rec.update(exact_best=best_mode,
+                   speedup_vs_best_exact=round(speedup, 2),
+                   agreement=agree)
+        best_agree = max(agree["ari"], agree["exact_match"])
+        assert best_agree >= AGREEMENT_FLOOR, (
+            f"hierarchical/exact agreement {agree} below "
+            f"{AGREEMENT_FLOOR} at N={n}")
+        if n >= SPEEDUP_AT:
+            assert speedup >= SPEEDUP_FLOOR, (
+                f"hierarchical only {speedup:.1f}x vs best exact "
+                f"({best_mode}) at N={n}; acceptance needs "
+                f">= {SPEEDUP_FLOOR}x")
+    else:
+        nn_bytes = 4 * n * n
+        rec.update(exact_attempted=False,
+                   exact_nn_matrix_gib=round(nn_bytes / 2**30, 1),
+                   reason=(f"N x N similarity alone is "
+                           f"{nn_bytes / 2**30:.0f} GiB fp32; the flat "
+                           "path is infeasible on one host"))
+    rows = [common.row(
+        f"scale_N{n}", warm * 1e6,
+        groups=groups,
+        speedup_vs_exact=rec.get("speedup_vs_best_exact", "n/a"),
+        ari_vs_tasks=rec["hier_ari_vs_tasks"])]
+    return rows, rec
+
+
+def run(quick: bool = False, json_path: str | None = None) -> list[str]:
+    grid = [512] if quick else [1024, 4096, 8192, 100_000]
+    landmark_grid = (16, 64) if quick else (16, 32, 64, 128, 256)
+    sketch_n = 512 if quick else 2048
+    rows, records = [], []
+    for n in grid:
+        r, rec = bench_point(n, run_exact=n <= EXACT_MAX_N)
+        rows.extend(r)
+        records.append(rec)
+        jax.clear_caches()
+    sketch = _sketch_sweep(sketch_n, landmark_grid)
+    rows.extend(common.row(
+        f"sketch_N{sketch_n}_m{r['landmarks']}", r["s"] * 1e6,
+        mean_abs_err=r["mean_abs_err"], ari=r["ari_vs_tasks"])
+        for r in sketch)
+    payload = {
+        "quick": quick, "backend": jax.default_backend(),
+        "d": D, "top_k": TOP_K, "samples": SAMPLES, "tasks": TASKS,
+        "timing": ("hier_warm_s vs warm best exact at co-run points; "
+                   "hier_cold_s includes compilation and is the honest "
+                   "one-off number at N=10^5"),
+        "agreement_floor": AGREEMENT_FLOOR,
+        "speedup_floor_at_n": {str(SPEEDUP_AT): SPEEDUP_FLOOR},
+        "grid": records, "sketch": sketch,
+    }
+    if json_path:
+        common.record_result(json_path, payload)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: N=512 only, same code paths + asserts")
+    ap.add_argument("--json", default="benchmarks/results/bench_scale.json",
+                    help="where to record the scaling grid")
+    args = ap.parse_args()
+    for r in run(quick=args.quick, json_path=args.json):
+        print(r, flush=True)

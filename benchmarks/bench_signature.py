@@ -178,6 +178,8 @@ def bench_grid(n_users: int, n: int, m: int, d: int, chunk: int
         rec = {"mode": name, "seconds": round(dt, 4),
                "speedup_vs_host": round(t_host / dt, 2),
                "lam_relerr": relerr, "peak_bytes": peak}
+        if cfg.backend == "pallas":
+            rec["pallas_interpret"] = jax.default_backend() != "tpu"
         recs.append(rec)
         rows.append(common.row(
             f"signature_{name}_N{n_users}_d{d}", dt * 1e6,

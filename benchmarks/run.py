@@ -20,7 +20,7 @@ import time
 
 SUITES = ["table1", "table2", "fig2", "fig3", "fig4", "comm", "ifca",
           "robustness", "kernels", "clustering", "signature", "pipeline",
-          "membership", "roofline"]
+          "membership", "scale", "roofline"]
 
 
 def run_suite(name: str, seeds: int) -> list[str]:
@@ -29,7 +29,7 @@ def run_suite(name: str, seeds: int) -> list[str]:
                             bench_fig4_eigvectors, bench_ifca,
                             bench_kernels, bench_membership,
                             bench_pipeline, bench_robustness,
-                            bench_roofline, bench_signature,
+                            bench_roofline, bench_scale, bench_signature,
                             bench_table1_similarity,
                             bench_table2_crossdataset)
 
@@ -54,6 +54,9 @@ def run_suite(name: str, seeds: int) -> list[str]:
         # likewise: the full acceptance grid (N up to 8192 table sizes,
         # re-run baselines) runs standalone
         "membership": lambda: bench_membership.run(quick=True),
+        # likewise: the full N=10^3 -> 10^5 trajectory (exact-path
+        # baselines + the 10^5 hierarchical point) runs standalone
+        "scale": lambda: bench_scale.run(quick=True),
         "roofline": lambda: bench_roofline.run(),
     }
     return fns[name]()

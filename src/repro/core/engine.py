@@ -23,6 +23,19 @@ drops from O(N * d^2) to O(block_users * d^2) + the O(N * d * k) signature
 table — exactly what each user receives over the air anyway — so
 multi-thousand-user similarity fits on one host.
 
+``landmarks = m > 0`` instead turns on the **Nystrom-sketched** flat
+path: every user is scored only against m << N landmark signatures via
+the ``kernels/assign`` projector-affinity scorer (``C (N, m)``), and the
+full similarity is completed from the landmark block, ``R ~= C W^+ C^T``
+with ``W = C[landmark_rows]`` — O(N * m) scored entries instead of
+O(N^2).  The sketched similarity approximates the (PSD, unit-diagonal)
+projector-affinity kernel ``A[i, j] = ||V_j^T V_i||_F^2 / k`` rather
+than the eigenvalue-ratio relevance of Eq. 3-4; both order same-task
+pairs above cross-task pairs, and the Nystrom completion is exact at
+m = N.  Landmark sets are nested (prefixes of one fixed seeded
+permutation), so the approximation error is monotone non-increasing
+in m.
+
 ``run_raw`` is the RAW-DATA entry point: callers hand per-user raw shards
 plus a ``FeatureConfig`` instead of pre-featurized arrays, and the
 ``SignatureEngine`` (``core/signature_engine.py``) runs featurize -> Gram
@@ -46,7 +59,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import similarity as sim
 from repro.core import signature_engine as sig
 
-__all__ = ["ProtocolEngine", "ProtocolResult", "BACKENDS", "make_user_mesh"]
+__all__ = ["ProtocolEngine", "ProtocolResult", "BACKENDS", "make_user_mesh",
+           "landmark_indices"]
 
 BACKENDS = ("jnp", "pallas", "shard_map")
 
@@ -123,6 +137,32 @@ def _tile_rows(features, n_valid, lam_tile, v_flat, eig_floor, top_k, impl):
             lambda lh: sim.relevance(lam_i, lh, eig_floor))(lam_hat)
 
     return jax.lax.map(one, (features, n_valid, lam_tile))
+
+
+# ---------------------------------------------------------------------------
+# Landmark/Nystrom-sketched path: O(N * m) scored entries, m << N
+# ---------------------------------------------------------------------------
+
+def landmark_indices(n: int, m: int) -> np.ndarray:
+    """``m`` deterministic landmark user ids out of ``n``, NESTED: every
+    set is a prefix of one fixed seeded permutation, so the set for any
+    ``m' > m`` contains the set for ``m`` and Nystrom error can only
+    shrink as landmarks are added.  A uniform permutation rather than an
+    index-stride scheme: federated rosters commonly interleave tasks
+    over user id (round-robin), where any stride-aligned pick collapses
+    onto a single task and the sketch misses whole clusters."""
+    if not 0 < m <= n:
+        raise ValueError(f"need 0 < m <= n, got m={m}, n={n}")
+    return np.random.default_rng(0x5EED).permutation(n)[:m].astype(np.int32)
+
+
+@jax.jit
+def _nystroem_complete(c: jax.Array, w: jax.Array) -> jax.Array:
+    """``R ~= C W^+ C^T`` from the scored columns ``C (N, m)`` and the
+    landmark-landmark block ``W (m, m)``, symmetrized + clipped to the
+    affinity range (pinv noise can leave tiny negatives / > 1 spill)."""
+    r = c @ jnp.linalg.pinv(w, rtol=1e-6) @ c.T
+    return jnp.clip(sim.symmetrize(r), 0.0, 1.0)
 
 
 # ---------------------------------------------------------------------------
@@ -231,6 +271,10 @@ class ProtocolEngine:
             raise ValueError("blockwise streaming (block_users > 0) is a "
                              "single-host mode; the shard_map backend "
                              "already tiles users over devices")
+        if cfg.landmarks and cfg.backend == "shard_map":
+            raise ValueError("the landmark-sketched path (landmarks > 0) "
+                             "is a single-host mode; shard_map computes "
+                             "exact relevance rows per device")
         self.cfg = cfg
         self.mesh = mesh
 
@@ -338,6 +382,11 @@ class ProtocolEngine:
                 "run_raw computes relevance on the (N, d', d') Gram stack "
                 "and does not support block_users streaming; stream the "
                 "ROW axis instead via SignatureConfig.chunk_rows")
+        if self.cfg.landmarks:
+            raise ValueError(
+                "run_raw computes exact relevance on the Gram stack and "
+                "does not support the landmark sketch; featurize first "
+                "and use run() with landmarks > 0")
         engine = self._signature_engine(feature_cfg, signature_cfg, probe)
         full = (n_valid is None
                 and isinstance(raw, (jax.Array, np.ndarray)))
@@ -396,6 +445,8 @@ class ProtocolEngine:
         ``(r, R, lam, v)``."""
         if self.cfg.backend == "shard_map":
             return self._run_shard_map(feats, nv)
+        if self.cfg.landmarks:
+            return self._run_landmarks(feats, nv)
         if self.cfg.block_users:
             return self._run_blockwise(feats, nv)
         return _dense_protocol(feats, nv, self._top_k(feats.shape[-1]),
@@ -438,6 +489,52 @@ class ProtocolEngine:
                                    self.cfg.eig_floor, top_k, self.impl))
         r = jnp.concatenate(rows)[:n_users, :n_users]
         return (r, sim.symmetrize(r), lam_all[:n_users], v_all[:n_users])
+
+    def _run_landmarks(self, feats: jax.Array, nv: jax.Array):
+        """Nystrom-sketched flat path -> ``(R, R, lam, v)``.
+
+        Pass 1 streams the signature table exactly like the blockwise
+        path (per-tile Grams die young).  Pass 2 scores every user
+        against the m landmark PROJECTORS ``V_j V_j^T`` through the
+        ``kernels/assign`` scorer — ``C[i, j] = ||V_j^T V_i||_F^2 / k``,
+        O(N * m) entries — and ``_nystroem_complete`` fills in the rest.
+        The sketched similarity is already symmetric, so the directed
+        ``r`` slot returns the same matrix.
+        """
+        n_users, _, d = feats.shape
+        m = self.cfg.landmarks
+        if m >= n_users:
+            raise ValueError(
+                f"landmarks={m} must be < n_users={n_users}: the sketch "
+                "only pays when m << N — drop landmarks to 0 and run the "
+                "exact dense path instead")
+        top_k = self._top_k(d)
+        tile = min(2048, n_users)
+        lam_tiles, v_tiles = [], []
+        for s in range(0, n_users, tile):
+            lam_t, v_t = _tile_signatures(feats[s:s + tile],
+                                          nv[s:s + tile], top_k, self.impl)
+            lam_tiles.append(lam_t)
+            v_tiles.append(v_t)
+        lam_all = jnp.concatenate(lam_tiles)              # (N, k)
+        v_all = jnp.concatenate(v_tiles)                  # (N, d, k)
+
+        idx = landmark_indices(n_users, m)
+        v_land = v_all[idx]
+        protos = jnp.einsum("mdk,mek->mde", v_land, v_land)   # (m, d, d)
+        if self.impl == "pallas":
+            from repro.kernels.assign import ops as assign_ops
+
+            score = partial(assign_ops.assign, protos=protos)
+        else:
+            from repro.kernels.assign.ref import assign_ref
+
+            score = jax.jit(partial(assign_ref, protos=protos))
+        cols = [score(v_all[s:s + tile])[0]
+                for s in range(0, n_users, tile)]
+        c = jnp.concatenate(cols)                         # (N, m)
+        big_r = _nystroem_complete(c, c[idx])
+        return big_r, big_r, lam_all, v_all
 
     def _run_shard_map(self, feats: jax.Array, nv: jax.Array):
         axis = self.cfg.mesh_axis

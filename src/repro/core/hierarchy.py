@@ -1,0 +1,330 @@
+"""Two-level hierarchical one-shot clustering — the O(N^2) wall breaker.
+
+Every flat path through the ``ProtocolEngine`` scores (or Nystrom-
+completes) an N x N relevance matrix before HAC runs, which caps the
+one-shot protocol at ~10^4 users on one host.  This module is the
+edge-server decomposition of the same Algorithm-2 maths:
+
+  1. **Shard** the N users into G edge groups of N_g = N / G.
+  2. **Group protocol + HAC**, all groups in ONE dispatch: the dense
+     protocol (``engine._dense_protocol``) and the device NN-chain HAC
+     (``cluster_engine._nn_chain`` / ``_cut_device``) are both single
+     jitted programs, so ``jax.vmap`` over the group axis clusters every
+     group at once — O(G * N_g^2) relevance entries instead of O(N^2).
+  3. **Compress** each group's T_g clusters into a directory entry, the
+     same representation the ``MembershipEngine`` serves from: the
+     cluster-mean rank-k Gram ``Ghat_t = mean_i V_i diag(lam_i) V_i^T``
+     re-eigendecomposed to an entry signature ``(lam_e, V_e)``, plus the
+     mean projector ``P_t = mean_i V_i V_i^T`` and the member count.
+  4. **Global stage**: the E = G * T_g entries are clustered into the
+     final T by HAC over ``similarity.signature_relevance`` — the same
+     signature-only relevance the drift re-cluster path already trusts —
+     at O(E^2) cost, E << N.
+  5. **Stitch**: user i's global label is the global label of its
+     group-local cluster's entry.  ``greedy_match_labels`` (the
+     canonical id matcher, shared with the ``MembershipEngine``
+     re-cluster path) aligns label ids across independent runs for
+     agreement measurement.
+
+Communication: a user talks only to its edge server — one ``(k x d)``
+signature upload plus an N_g-length relevance row (vs N-length flat);
+each edge server forwards T_g entry signatures to the GPS.  The ledger
+on the result accounts the per-user view with ``n_users = N_g``.
+
+The result duck-types ``OneShotResult`` where it matters:
+``MembershipEngine.from_oneshot`` consumes ``labels`` / ``lam`` / ``v``
+unchanged, so online serving works identically at hierarchical scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import similarity as sim
+from repro.core.cluster_engine import (ClusterConfig, ClusterEngine,
+                                       _cut_device, _nn_chain)
+from repro.core.engine import _dense_protocol
+from repro.core.oneshot import CommLedger
+
+__all__ = ["HierarchyConfig", "HierarchicalResult", "hierarchical_one_shot",
+           "greedy_match_labels", "group_permutation"]
+
+_ASSIGNMENTS = ("contiguous", "strided")
+_NEG = -jnp.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchyConfig:
+    """Configuration of the two-level protocol.
+
+    Attributes:
+      n_groups: G edge groups.  ``n_users % n_groups == 0`` is required —
+        phantom-user padding would distort the group HAC heights.
+      group_clusters: T_g clusters cut per group; ``0`` means the final
+        ``n_clusters`` (safe default: a group that happens to contain
+        every task can still separate them).  Must end up <= N / G.
+      group_batch: groups vmapped per dispatch; ``0`` = all G at once.
+        Bounds peak memory at O(group_batch * (N/G)^2 + N * d * k).
+      assignment: how user ids map to groups — "contiguous" (group g =
+        ids [g*N_g, (g+1)*N_g)) or "strided" (group g = ids g, g+G, ...;
+        mixes rosters that arrive sorted by task).
+    """
+
+    n_groups: int
+    group_clusters: int = 0
+    group_batch: int = 0
+    assignment: str = "contiguous"
+
+    def __post_init__(self):
+        if self.n_groups < 2:
+            raise ValueError(f"n_groups must be >= 2 (use the flat path "
+                             f"for one group), got {self.n_groups}")
+        if self.group_clusters < 0:
+            raise ValueError(f"group_clusters must be >= 0, "
+                             f"got {self.group_clusters}")
+        if self.group_batch < 0:
+            raise ValueError(f"group_batch must be >= 0, "
+                             f"got {self.group_batch}")
+        if self.assignment not in _ASSIGNMENTS:
+            raise ValueError(f"assignment must be one of {_ASSIGNMENTS}, "
+                             f"got {self.assignment!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchicalResult:
+    """Global labels + the directory the global stage clustered.
+
+    ``labels`` / ``lam`` / ``v`` follow the ``OneShotResult`` contract
+    (``MembershipEngine.from_oneshot`` consumes them unchanged).  The
+    entry arrays expose the compressed level: ``entry_labels[e]`` is the
+    global cluster of directory entry ``e = g * T_g + t_local``, and a
+    user's global label is ``entry_labels[group_ids * T_g +
+    local_labels]`` by construction.
+    """
+
+    labels: jax.Array               # (N,) global cluster ids 0..T-1
+    lam: jax.Array                  # (N, k) shared per-user spectra
+    v: jax.Array                    # (N, d, k) shared eigenvectors
+    group_ids: jax.Array            # (N,) edge group of each user
+    local_labels: jax.Array         # (N,) group-local cluster ids
+    entry_labels: jax.Array         # (E,) global label per entry
+    entry_lam: jax.Array            # (E, k) entry spectra
+    entry_v: jax.Array              # (E, d, k) entry eigenvectors
+    entry_protos: jax.Array         # (E, d, d) mean projectors
+    entry_counts: jax.Array         # (E,) members per entry
+    global_similarity: jax.Array    # (E, E) signature-only relevance
+    ledger: CommLedger              # per-user view: n_users = N / G
+
+
+def greedy_match_labels(new_labels: np.ndarray, old_labels: np.ndarray,
+                        n_clusters: int) -> np.ndarray:
+    """Greedy-overlap relabeling of ``new_labels`` onto ``old_labels``'
+    ids (both length-N, values in [0, n_clusters) or -1 = unassigned).
+
+    HAC cut ids are arbitrary, so any two runs — or the two levels of
+    the hierarchy vs a flat run — need id alignment before exact-match
+    agreement means anything.  Host-side: matching is a rare, tiny
+    (T x T) event.  Shared by the ``MembershipEngine`` re-cluster path
+    (serving continuity) and the scale benchmarks (agreement metric).
+    """
+    new_labels = np.asarray(new_labels)
+    old_labels = np.asarray(old_labels)
+    overlap = np.zeros((n_clusters, n_clusters), np.int64)
+    for new, old in zip(new_labels, old_labels):
+        if new >= 0 and old >= 0:
+            overlap[new, old] += 1
+    perm = np.full(n_clusters, -1, np.int64)
+    used = np.zeros(n_clusters, bool)
+    for new, old in zip(*np.unravel_index(np.argsort(-overlap, axis=None),
+                                          overlap.shape)):
+        if perm[new] < 0 and not used[old]:
+            perm[new] = old
+            used[old] = True
+    for t in range(n_clusters):                 # clusters with no overlap
+        if perm[t] < 0:
+            perm[t] = int(np.flatnonzero(~used)[0])
+            used[perm[t]] = True
+    return np.where(new_labels >= 0, perm[np.clip(new_labels, 0, None)],
+                    -1).astype(np.int32)
+
+
+def group_permutation(n_users: int, cfg: HierarchyConfig) -> np.ndarray:
+    """User-id order such that ``perm.reshape(G, N_g)`` rows are the
+    edge groups.  A pure host-side index computation."""
+    if n_users % cfg.n_groups:
+        raise ValueError(
+            f"n_users={n_users} not divisible by n_groups="
+            f"{cfg.n_groups}: phantom-user padding would distort the "
+            "group HAC — resize the groups instead")
+    perm = np.arange(n_users)
+    if cfg.assignment == "strided":
+        perm = perm.reshape(-1, cfg.n_groups).T.ravel()
+    return perm
+
+
+# ---------------------------------------------------------------------------
+# Batched group stage: protocol + NN-chain HAC, vmapped over groups
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("top_k", "impl"))
+def _batched_protocol(feats, nv, top_k, eig_floor, impl):
+    """``feats (B, N_g, n, d)`` -> per-group ``(R (B, N_g, N_g),
+    lam (B, N_g, k), v (B, N_g, d, k))`` — B groups, one dispatch."""
+    _, big_r, lam, v = jax.vmap(
+        lambda f, m: _dense_protocol(f, m, top_k, eig_floor, impl))(feats, nv)
+    return big_r, lam, v
+
+
+@partial(jax.jit, static_argnames=("n", "linkage", "impl", "interpret",
+                                   "n_clusters"))
+def _batched_hac_cut(big_r, *, n: int, linkage: str, impl: str,
+                     interpret: bool | None, n_clusters: int):
+    """Batched device HAC: prepare (diag -inf) + NN-chain + cut, vmapped
+    over the leading group axis -> ``(labels (B, n), steps (B,))``."""
+    idx = jnp.arange(n)
+    alive = jnp.ones((n,), bool)
+
+    def one(r):
+        s = r.astype(jnp.float32).at[idx, idx].set(_NEG)
+        merge_rows, heights, steps = _nn_chain(
+            s, alive, n=n, linkage=linkage, impl=impl, interpret=interpret)
+        labels = _cut_device(merge_rows, heights, n_leaves=n,
+                             n_clusters=n_clusters)
+        return labels, steps
+
+    return jax.vmap(one)(big_r)
+
+
+# ---------------------------------------------------------------------------
+# Directory compression: per-entry mean rank-k Gram -> entry signature
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("n_entries", "top_k"))
+def _compress_entries(lam, v, entry_id, *, n_entries: int, top_k: int):
+    """``(lam (N, k), v (N, d, k), entry_id (N,))`` -> directory arrays.
+
+    The entry's rank-k Gram reconstruction ``Ghat = mean_i V_i
+    diag(lam_i) V_i^T`` is re-eigendecomposed so the entry signature has
+    the exact ``(lam_e, V_e)`` shape ``signature_relevance`` expects;
+    the unweighted mean projector rides along for serving-directory
+    parity with ``MembershipEngine``.  Segment sums keep this one pass
+    over the users, O(N * d^2) flops.
+    """
+    w = jnp.einsum("ndk,nk,nek->nde", v, lam, v)      # V diag(lam) V^T
+    p = jnp.einsum("ndk,nek->nde", v, v)              # V V^T
+    seg_w = jax.ops.segment_sum(w, entry_id, num_segments=n_entries)
+    seg_p = jax.ops.segment_sum(p, entry_id, num_segments=n_entries)
+    counts = jax.ops.segment_sum(jnp.ones_like(entry_id, jnp.float32),
+                                 entry_id, num_segments=n_entries)
+    denom = jnp.maximum(counts, 1.0)[:, None, None]
+    ghat = seg_w / denom
+    protos = seg_p / denom
+    lam_e, v_e = jax.vmap(lambda g: sim.spectrum(g, top_k))(ghat)
+    return lam_e, v_e, protos, counts
+
+
+# ---------------------------------------------------------------------------
+# The two-level protocol
+# ---------------------------------------------------------------------------
+
+def hierarchical_one_shot(features, n_clusters: int,
+                          cfg: sim.SimilarityConfig | None = None,
+                          hierarchy_cfg: HierarchyConfig | None = None,
+                          cluster_cfg: ClusterConfig | None = None,
+                          n_valid=None, model_params: int = 0
+                          ) -> HierarchicalResult:
+    """Two-level one-shot clustering of ``features`` into ``n_clusters``.
+
+    ``cfg`` supplies the protocol maths knobs (``top_k``, ``eig_floor``,
+    ``impl``); its *routing* fields must be off — groups ARE the scaling
+    mechanism here, so ``backend`` must be single-host ("jnp"/"pallas")
+    and ``block_users`` / ``landmarks`` zero.  ``cluster_cfg`` drives
+    BOTH HAC stages and must be a device backend ("jnp"/"pallas",
+    default "jnp"): the group stage is a vmapped NN-chain, which the
+    host-numpy reference cannot batch.
+    """
+    cfg = cfg or sim.SimilarityConfig()
+    hcfg = hierarchy_cfg or HierarchyConfig(n_groups=2)
+    ccfg = cluster_cfg or ClusterConfig(backend="jnp")
+    if cfg.backend == "shard_map":
+        raise ValueError("hierarchical_one_shot shards users into groups "
+                         "itself; use a single-host backend "
+                         "('jnp'/'pallas') for the group protocol")
+    if cfg.block_users or cfg.landmarks:
+        raise ValueError(
+            "hierarchical_one_shot runs the DENSE protocol per edge "
+            "group (each group is already small); block_users="
+            f"{cfg.block_users} / landmarks={cfg.landmarks} must be 0")
+    if ccfg.backend == "numpy":
+        raise ValueError("the group HAC stage is a batched (vmapped) "
+                         "device NN-chain; use cluster backend 'jnp' or "
+                         "'pallas'")
+
+    feats, nv = sim.prepare_user_batch(features, n_valid, device=True)
+    n_users, n_samples, d = feats.shape
+    g = hcfg.n_groups
+    perm = group_permutation(n_users, hcfg)
+    inv_perm = np.argsort(perm)
+    ng = n_users // g
+    t_g = hcfg.group_clusters or n_clusters
+    if not 1 <= t_g <= ng:
+        raise ValueError(f"group_clusters={t_g} must be in [1, N/G={ng}]")
+    n_entries = g * t_g
+    if not 1 <= n_clusters <= n_entries:
+        raise ValueError(
+            f"n_clusters={n_clusters} must be in [1, G*T_g={n_entries}] — "
+            "raise group_clusters or n_groups")
+
+    top_k = min(cfg.top_k or d, d)
+    impl = "pallas" if cfg.backend == "pallas" else cfg.impl
+    hac_impl = "pallas" if ccfg.backend == "pallas" else "jnp"
+    feats_g = feats[perm].reshape(g, ng, n_samples, d)
+    nv_g = nv[perm].reshape(g, ng)
+
+    # -- level 1: per-group protocol + HAC, batches of groups ---------------
+    batch = hcfg.group_batch or g
+    lam_parts, v_parts, local_parts = [], [], []
+    for s in range(0, g, batch):
+        big_r, lam_b, v_b = _batched_protocol(
+            feats_g[s:s + batch], nv_g[s:s + batch], top_k,
+            cfg.eig_floor, impl)
+        labels_b, steps = _batched_hac_cut(
+            big_r, n=ng, linkage=ccfg.linkage, impl=hac_impl,
+            interpret=ccfg.interpret, n_clusters=t_g)
+        bad = np.flatnonzero(np.asarray(steps) != ng - 1)
+        if bad.size:                            # same witness as ClusterEngine
+            raise ValueError(
+                f"group HAC stopped early in group(s) {s + bad} — the "
+                "group similarity likely contains NaN/Inf")
+        lam_parts.append(lam_b.reshape(-1, top_k))
+        v_parts.append(v_b.reshape(-1, d, top_k))
+        local_parts.append(labels_b.reshape(-1))
+    lam_g = jnp.concatenate(lam_parts)          # (N, k), group order
+    v_g = jnp.concatenate(v_parts)              # (N, d, k), group order
+    local_g = jnp.concatenate(local_parts)      # (N,), group order
+    group_of = jnp.repeat(jnp.arange(g, dtype=jnp.int32), ng)
+
+    # -- level 2: compress clusters -> directory entries --------------------
+    entry_id = group_of * t_g + local_g         # (N,) in [0, E)
+    lam_e, v_e, protos_e, counts_e = _compress_entries(
+        lam_g, v_g, entry_id, n_entries=n_entries, top_k=top_k)
+
+    # -- level 2: global clustering on signature-only relevance -------------
+    r_global = sim.signature_relevance(lam_e, v_e, eig_floor=cfg.eig_floor)
+    entry_labels = ClusterEngine(ccfg).labels(r_global, n_clusters)
+
+    # -- stitch back to user order ------------------------------------------
+    labels_g = entry_labels[entry_id]           # (N,), group order
+    inv = jnp.asarray(inv_perm)
+    ledger = CommLedger(n_users=ng, d=d, top_k=top_k,
+                        model_params=model_params, mode="broadcast")
+    return HierarchicalResult(
+        labels=labels_g[inv], lam=lam_g[inv], v=v_g[inv],
+        group_ids=group_of[inv], local_labels=local_g[inv],
+        entry_labels=entry_labels, entry_lam=lam_e, entry_v=v_e,
+        entry_protos=protos_e, entry_counts=counts_e,
+        global_similarity=r_global, ledger=ledger)

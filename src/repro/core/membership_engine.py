@@ -247,50 +247,20 @@ def _proto_update(protos, counts, delta, m, *, sign: float):
                      jnp.zeros_like(upd)), new_counts
 
 
-@partial(jax.jit, static_argnames=("eig_floor",))
-def signature_relevance(lam, v, eig_floor: float = 1e-6):
-    """Symmetrized relevance ``R (N, N)`` from SHARED signatures only.
-
-    Rank-k Gram reconstruction: ``G_i v ~ V_i diag(lam_i) (V_i^T v)``, so
-    ``lamhat(i, j) = ||diag(lam_i) (V_i^T V_j)||`` column-wise — O(k^2 d)
-    per pair instead of O(k d^2), and computable by the GPS without any
-    private Gram.  Row-mapped so peak memory stays O(N k^2).
-    """
-
-    def row(args):
-        lam_i, v_i = args
-        c = jnp.einsum("dk,ndl->nkl", v_i, v)            # (N, k, k)
-        lam_hat = jnp.sqrt(jnp.sum((lam_i[None, :, None] * c) ** 2,
-                                   axis=1))              # (N, k)
-        return jax.vmap(lambda lh: sim.relevance(lam_i, lh, eig_floor)
-                        )(lam_hat)
-
-    r = jax.lax.map(row, (lam, v))
-    return sim.symmetrize(r)
+# Canonical home is ``core.similarity`` (the hierarchy global stage uses
+# it too); re-exported here because it is directory-serving API surface.
+signature_relevance = sim.signature_relevance
 
 
 def _match_labels(new_labels: np.ndarray, old_labels: np.ndarray,
                   n_clusters: int) -> np.ndarray:
     """Greedy-overlap relabeling of a fresh cut onto the previous
     directory ids, so serving continuity survives a re-cluster (HAC cut
-    ids are arbitrary).  Host-side — re-clusters are rare events."""
-    overlap = np.zeros((n_clusters, n_clusters), np.int64)
-    for new, old in zip(new_labels, old_labels):
-        if new >= 0 and old >= 0:
-            overlap[new, old] += 1
-    perm = np.full(n_clusters, -1, np.int64)
-    used = np.zeros(n_clusters, bool)
-    for new, old in zip(*np.unravel_index(np.argsort(-overlap, axis=None),
-                                          overlap.shape)):
-        if perm[new] < 0 and not used[old]:
-            perm[new] = old
-            used[old] = True
-    for t in range(n_clusters):                 # clusters with no overlap
-        if perm[t] < 0:
-            perm[t] = int(np.flatnonzero(~used)[0])
-            used[perm[t]] = True
-    return np.where(new_labels >= 0, perm[np.clip(new_labels, 0, None)],
-                    UNASSIGNED).astype(np.int32)
+    ids are arbitrary).  Host-side — re-clusters are rare events.
+    Canonical implementation: ``core.hierarchy.greedy_match_labels``."""
+    from repro.core.hierarchy import greedy_match_labels
+
+    return greedy_match_labels(new_labels, old_labels, n_clusters)
 
 
 # ---------------------------------------------------------------------------

@@ -171,8 +171,8 @@ def one_shot_clustering(features: Sequence[np.ndarray] | jax.Array,
                         cluster_cfg: ClusterConfig | None = None,
                         feature_cfg=None,
                         probe: np.ndarray | None = None,
-                        signature_cfg=None
-                        ) -> OneShotResult:
+                        signature_cfg=None,
+                        hierarchy_cfg=None):
     """Run paper Algorithm 2 end-to-end on per-user feature matrices.
 
     ``features``: list of ``(n_i, d)`` arrays (or a padded ``(N, n, d)``
@@ -199,6 +199,15 @@ def one_shot_clustering(features: Sequence[np.ndarray] | jax.Array,
     serve STREAMING arrivals afterwards: a newcomer's cluster identity
     costs one O(T * k * d^2) directory lookup instead of re-running this
     O(N^2) protocol.
+
+    HIERARCHICAL ENTRY POINT: passing ``hierarchy_cfg`` (a
+    ``repro.core.hierarchy.HierarchyConfig``) routes to the two-level
+    edge-group protocol — O(G * (N/G)^2 + (G * T_g)^2) instead of O(N^2)
+    — and returns a ``HierarchicalResult`` instead: same ``labels`` /
+    ``lam`` / ``v`` / ``ledger`` contract (``from_oneshot`` compatible),
+    no N x N ``similarity``/``dendrogram`` (that matrix is exactly what
+    the hierarchy never builds).  Pre-featurized single-host configs
+    only.
     """
     if (cluster_cfg is not None and linkage != "average"
             and linkage != cluster_cfg.linkage):
@@ -210,6 +219,18 @@ def one_shot_clustering(features: Sequence[np.ndarray] | jax.Array,
                                 or signature_cfg is not None):
         raise ValueError("probe/signature_cfg configure the raw-data "
                          "entry point; pass feature_cfg to enable it")
+    if hierarchy_cfg is not None:
+        if feature_cfg is not None:
+            raise ValueError("the hierarchical path consumes pre-"
+                             "featurized users; run the SignatureEngine "
+                             "separately before hierarchy_cfg")
+        from repro.core.hierarchy import hierarchical_one_shot
+
+        return hierarchical_one_shot(
+            features, n_clusters, cfg=cfg, hierarchy_cfg=hierarchy_cfg,
+            cluster_cfg=(cluster_cfg if cluster_cfg is not None
+                         else ClusterConfig(backend="jnp", linkage=linkage)),
+            n_valid=n_valid, model_params=model_params)
     engine = ProtocolEngine(cfg, mesh=mesh)
     if feature_cfg is not None:
         res = engine.run_raw(features, feature_cfg, n_valid=n_valid,

@@ -34,6 +34,7 @@ __all__ = [
     "cross_project",
     "relevance",
     "relevance_matrix",
+    "signature_relevance",
     "symmetrize",
     "similarity_matrix",
     "perturb_eigenvectors",
@@ -63,6 +64,15 @@ class SimilarityConfig:
         processed in tiles of this size, Grams live only per tile, and
         cross-projection is Gram-free — peak memory O(block_users * d^2).
         Single-host backends only.
+      landmarks: ``0`` scores every user pair (O(N^2) relevance entries).
+        ``> 0`` enables the Nystrom-SKETCHED flat path: all N users are
+        scored against ``landmarks`` landmark signatures only (the
+        ``kernels/assign`` projector-affinity scorer) and R is completed
+        from the m x m landmark block — O(N * m) scored entries instead of
+        O(N^2).  Mutually exclusive with ``block_users`` (the sketched
+        path never materializes the N x N cross-projection the streaming
+        tiles exist to bound; combining them has no meaning and is
+        rejected).  Single-host backends only; must be < N at run time.
       mesh_axis: mesh axis users are sharded over (shard_map backend).
     """
 
@@ -71,6 +81,7 @@ class SimilarityConfig:
     impl: str = "jnp"
     backend: str = "jnp"
     block_users: int = 0
+    landmarks: int = 0
     mesh_axis: str = "data"
 
     def __post_init__(self):
@@ -86,6 +97,14 @@ class SimilarityConfig:
         if self.block_users < 0:
             raise ValueError(f"block_users must be >= 0, "
                              f"got {self.block_users}")
+        if self.landmarks < 0:
+            raise ValueError(f"landmarks must be >= 0 (0 = exact, no "
+                             f"sketch), got {self.landmarks}")
+        if self.landmarks and self.block_users:
+            raise ValueError(
+                "landmarks and block_users are mutually exclusive: the "
+                "sketched path scores O(N * m) entries and never builds "
+                "the N x N matrix blockwise streaming tiles — pick one")
 
 
 def pad_ragged(features: Sequence[np.ndarray], device: bool = True
@@ -261,6 +280,33 @@ def relevance_matrix(grams: jax.Array, lams: jax.Array, vs: jax.Array,
         return jax.vmap(one)(vs)
 
     return jax.vmap(row)(grams, lams)
+
+
+@partial(jax.jit, static_argnames=("eig_floor",))
+def signature_relevance(lam, v, eig_floor: float = 1e-6):
+    """Symmetrized relevance ``R (N, N)`` from SHARED signatures only.
+
+    Rank-k Gram reconstruction: ``G_i v ~ V_i diag(lam_i) (V_i^T v)``, so
+    ``lamhat(i, j) = ||diag(lam_i) (V_i^T V_j)||`` column-wise — O(k^2 d)
+    per pair instead of O(k d^2), and computable by the GPS without any
+    private Gram.  Row-mapped so peak memory stays O(N k^2).
+
+    Shared by the ``MembershipEngine`` drift re-cluster and the
+    ``core.hierarchy`` global stage (clustering the per-group directory
+    entries): both decide over compressed signatures the GPS already
+    holds, with no extra protocol round.
+    """
+
+    def row(args):
+        lam_i, v_i = args
+        c = jnp.einsum("dk,ndl->nkl", v_i, v)            # (N, k, k)
+        lam_hat = jnp.sqrt(jnp.sum((lam_i[None, :, None] * c) ** 2,
+                                   axis=1))              # (N, k)
+        return jax.vmap(lambda lh: relevance(lam_i, lh, eig_floor)
+                        )(lam_hat)
+
+    r = jax.lax.map(row, (lam, v))
+    return symmetrize(r)
 
 
 # ---------------------------------------------------------------------------

@@ -16,7 +16,8 @@ PyTree = Any
 PathPred = Callable[[tuple[str, ...]], bool]
 
 __all__ = ["tree_paths", "prefix_predicate", "split_params", "merge_params",
-           "tree_path_map", "stack_layout", "admit_layout"]
+           "tree_path_map", "stack_layout", "admit_layout",
+           "group_stack_layout"]
 
 
 def tree_paths(tree: Mapping, prefix: tuple[str, ...] = ()) -> list[tuple[str, ...]]:
@@ -101,6 +102,42 @@ def stack_layout(labels, n_clusters: int, c_max: int | None = None
     mask = jnp.zeros((n_clusters, c_max), jnp.float32)
     mask = mask.at[rows, slot].set(1.0)
     return rows, slot, mask
+
+
+def group_stack_layout(labels, group_ids, n_groups: int, n_clusters: int,
+                       c_max: int | None = None
+                       ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                  jax.Array]:
+    """Edge-grouped ``(G, T, C_max)`` super-stack layout for the
+    hierarchical protocol (``core.hierarchy``): each edge server holds
+    only ITS members of each global cluster, so the per-server trainer
+    stack is the ``(T, C_max)`` slice ``mask[g]``.
+
+    ``labels (N,)`` global cluster ids + ``group_ids (N,)`` edge groups
+    -> ``(grows (N,), rows (N,), slot (N,), mask (G, T, C_max))`` with
+    the same scatter contract as ``stack_layout``: per-user payloads go
+    through ``stack.at[grows, rows, slot].set(values)`` and any invalid
+    label or group id gets the out-of-range ``(G, T, C_max)`` sentinel
+    triple, which the scatter drops.  ``c_max`` bounds the LARGEST
+    per-group cluster (not the global cluster size — grouping is exactly
+    what shrinks the rows), and an undersized value raises just like
+    ``stack_layout``.
+    """
+    labels = jnp.asarray(labels, jnp.int32)
+    gids = jnp.asarray(group_ids, jnp.int32)
+    if labels.shape != gids.shape:
+        raise ValueError(f"labels {labels.shape} and group_ids "
+                         f"{gids.shape} must align")
+    valid = ((labels >= 0) & (labels < n_clusters)
+             & (gids >= 0) & (gids < n_groups))
+    # One flat (group, cluster) index reuses stack_layout's stable-rank
+    # and sentinel machinery wholesale.
+    combined = jnp.where(valid, gids * n_clusters + labels, -1)
+    _, slot, mask = stack_layout(combined, n_groups * n_clusters,
+                                 c_max=c_max)
+    grows = jnp.where(valid, gids, n_groups).astype(jnp.int32)
+    rows = jnp.where(valid, labels, n_clusters).astype(jnp.int32)
+    return grows, rows, slot, mask.reshape(n_groups, n_clusters, -1)
 
 
 def admit_layout(mask, new_labels, n_clusters: int | None = None

@@ -18,6 +18,11 @@ drift-triggered re-cluster event:
   # fused pallas assignment kernel
   PYTHONPATH=src python -m repro.launch.membership --backend pallas
 
+  # hierarchical seeding: cluster 512 seed users in 8 edge groups
+  # (core.hierarchy) — the directory serves the result unchanged
+  PYTHONPATH=src python -m repro.launch.membership --seed-users 512 \\
+      --seed-groups 8
+
 The loop also maintains the trainer-side ``(T, C_max)`` super-stack
 layout through ``fed.partition.admit_layout`` — the warm-start hook that
 slots admitted arrivals into the existing stack without retracing the
@@ -34,6 +39,10 @@ import numpy as np
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--seed-users", type=int, default=64)
+    ap.add_argument("--seed-groups", type=int, default=0,
+                    help="> 0 clusters the seed via the hierarchical "
+                         "two-level protocol (this many edge groups) "
+                         "instead of the flat O(N^2) path")
     ap.add_argument("--samples", type=int, default=48)
     ap.add_argument("--dim", type=int, default=32)
     ap.add_argument("--tasks", type=int, default=4)
@@ -77,13 +86,21 @@ def main() -> None:
     arrival_pool = seed_pool[args.seed_users:]
 
     scfg = SimilarityConfig(top_k=args.top_k)
+    hierarchy_cfg = None
+    if args.seed_groups:
+        from repro.core.hierarchy import HierarchyConfig
+
+        hierarchy_cfg = HierarchyConfig(n_groups=args.seed_groups)
     t0 = time.time()
     res = oneshot.one_shot_clustering(jnp.asarray(feats_all[seed_idx]),
-                                      n_clusters=args.tasks, cfg=scfg)
+                                      n_clusters=args.tasks, cfg=scfg,
+                                      hierarchy_cfg=hierarchy_cfg)
     seed_labels = np.asarray(res.labels)
     seed_tasks = tids_all[seed_idx]
     seed_acc = clu.clustering_accuracy(seed_labels, seed_tasks)
-    print(f"seed: {args.seed_users} users, one-shot protocol + HAC in "
+    how = (f"hierarchical ({args.seed_groups} groups)" if args.seed_groups
+           else "one-shot")
+    print(f"seed: {args.seed_users} users, {how} protocol + HAC in "
           f"{time.time() - t0:.2f}s, clustering accuracy {seed_acc:.1%}")
 
     # cluster id -> oracle task id (majority vote over the seed).

@@ -20,6 +20,15 @@ the protocol-side analogue of ``launch/train.py`` / ``launch/serve.py``:
   PYTHONPATH=src python -m repro.launch.protocol --users 512 \\
       --raw-dim 256 --feature random_projection --dim 64 --chunk-rows 32
 
+  # hierarchical two-level protocol: 16384 users in 64 edge groups,
+  # O(G * (N/G)^2) relevance entries instead of O(N^2)
+  PYTHONPATH=src python -m repro.launch.protocol --users 16384 \\
+      --groups 64 --group-clusters 8 --cluster-backend jnp
+
+  # landmark/Nystrom-sketched flat path: O(N * m) scored entries
+  PYTHONPATH=src python -m repro.launch.protocol --users 4096 \\
+      --landmarks 128
+
 ``--devices N`` forces N host platform devices and MUST act before jax
 initializes, so all repro/jax imports happen inside ``main`` after the
 flag is set.
@@ -48,6 +57,16 @@ def main() -> None:
                     choices=["average", "single", "complete"])
     ap.add_argument("--block-users", type=int, default=0,
                     help="> 0 enables blockwise streaming (single host)")
+    ap.add_argument("--landmarks", type=int, default=0,
+                    help="> 0 enables the Nystrom-sketched flat path: "
+                         "score m landmarks, complete R (single host)")
+    ap.add_argument("--groups", type=int, default=0,
+                    help="> 0 enables the hierarchical two-level "
+                         "protocol with this many edge groups")
+    ap.add_argument("--group-clusters", type=int, default=0,
+                    help="clusters cut per edge group (0 = --tasks)")
+    ap.add_argument("--group-batch", type=int, default=0,
+                    help="edge groups per dispatch (0 = all at once)")
     ap.add_argument("--raw-dim", type=int, default=0,
                     help="> 0 enables the RAW-DATA entry point: users hand "
                          "raw m-dim shards and the SignatureEngine "
@@ -84,12 +103,21 @@ def main() -> None:
     from repro.data import synthetic as syn
 
     raw_mode = args.raw_dim > 0
+    hier_mode = args.groups > 0
     mix_dim = args.raw_dim if raw_mode else args.dim
     feats, task_ids = syn.make_task_feature_mixture(
         args.users, args.samples, mix_dim, args.tasks, seed=args.seed)
     cfg = SimilarityConfig(top_k=args.top_k, backend=args.backend,
-                           block_users=args.block_users)
+                           block_users=args.block_users,
+                           landmarks=args.landmarks)
     ccfg = ClusterConfig(backend=args.cluster_backend, linkage=args.linkage)
+    hierarchy_cfg = None
+    if hier_mode:
+        from repro.core.hierarchy import HierarchyConfig
+
+        hierarchy_cfg = HierarchyConfig(n_groups=args.groups,
+                                        group_clusters=args.group_clusters,
+                                        group_batch=args.group_batch)
     feature_cfg = signature_cfg = None
     sig_dim = args.dim
     if raw_mode:
@@ -105,15 +133,16 @@ def main() -> None:
           f"{'m=%d -> d=%d (%s)' % (mix_dim, sig_dim, args.feature) if raw_mode else 'd=%d' % args.dim}, "
           f"{args.tasks} tasks | backend={args.backend} "
           f"cluster_backend={args.cluster_backend} "
-          f"block_users={args.block_users} "
-          f"raw={raw_mode} chunk_rows={args.chunk_rows} "
-          f"devices={len(jax.devices())}")
+          f"block_users={args.block_users} landmarks={args.landmarks} "
+          f"groups={args.groups} raw={raw_mode} "
+          f"chunk_rows={args.chunk_rows} devices={len(jax.devices())}")
 
     t0 = time.time()
     res = oneshot.one_shot_clustering(
         feats if raw_mode else jax.numpy.asarray(feats),
         n_clusters=args.tasks, cfg=cfg, cluster_cfg=ccfg,
-        feature_cfg=feature_cfg, signature_cfg=signature_cfg)
+        feature_cfg=feature_cfg, signature_cfg=signature_cfg,
+        hierarchy_cfg=hierarchy_cfg)
     labels = np.asarray(res.labels)           # host sync for reporting only
     dt = time.time() - t0
     acc = clu.clustering_accuracy(labels, task_ids)
@@ -121,9 +150,17 @@ def main() -> None:
     print(f"protocol + HAC: {dt:.2f}s | clustering accuracy {acc:.1%} | "
           f"cluster sizes {sizes.tolist()}")
     led = res.ledger.summary()
-    print(f"per-user upload {led['per_user_upload_bytes'] / 1024:.1f} KiB, "
+    scope = (f"(per-user view WITHIN its {args.users // args.groups}-user "
+             f"edge group) " if hier_mode else "")
+    print(f"per-user upload {scope}"
+          f"{led['per_user_upload_bytes'] / 1024:.1f} KiB, "
           f"download {led['per_user_download_bytes'] / 2**20:.2f} MiB, "
           f"GPS total {led['gps_total_bytes'] / 2**20:.2f} MiB")
+    if hier_mode:
+        entries = int(np.asarray(res.entry_counts).size)
+        print(f"directory: {args.groups} groups -> {entries} entries -> "
+              f"{args.tasks} global clusters | global stage "
+              f"{entries}x{entries} signature-only relevance")
 
 
 if __name__ == "__main__":
