@@ -42,7 +42,7 @@ def run_suite(name: str, seeds: int) -> list[str]:
         "fig4": lambda: bench_fig4_eigvectors.run(),
         "comm": lambda: bench_comm_cost.run(),
         "ifca": lambda: bench_ifca.run(),
-        "robustness": lambda: bench_robustness.run(),
+        "robustness": lambda: bench_robustness.run(quick=True),
         "kernels": lambda: bench_kernels.run(),
         # quick grid inside the harness; the full N=4096 sweep (which
         # times the O(N^3) host reference once) runs standalone

@@ -40,6 +40,31 @@ The signature-only relevance uses the rank-k reconstruction
 ``G_i ~ V_i diag(lam_i) V_i^T`` — exactly the data users shared — so
 ``lamhat = ||diag(lam_i) (V_i^T v_j)||`` needs no private Grams and the
 GPS can re-cluster without another protocol round.
+
+**Robust prototypes (dirty-data serving).**  The plain mean projector has
+breakdown point 0: one Byzantine signature upload (no norm check is
+possible on an adversarial client) steers a whole cluster's directory
+entry arbitrarily far.  ``MembershipConfig.aggregator`` selects a
+resistant statistic over the member projectors ``V_i V_i^T``:
+
+  aggregator | statistic                         | breakdown point
+  -----------|-----------------------------------|----------------------
+  "mean"     | streaming mean (the paper's)      | 0
+  "trimmed"  | coordinate-wise trimmed mean,     | ``trim_frac``
+             | ``trim_frac`` cut from each end   |
+  "medians"  | coordinate-wise median-of-means   | ~``n_clean_groups/2``
+             | over ``mom_groups`` member groups |
+
+The resistant modes cannot be maintained by the O(1) streaming
+admit/evict down-date (order statistics do not decompose), so those
+paths fall back to a windowed recompute over the live table — the clean
+"mean" path keeps its streaming update and its latency.  The drift
+statistic has a matching robust variant: ``drift_stat="median"`` trips
+the re-cluster trigger on the *median* per-cluster prototype shift
+instead of the max, so one poisoned prototype cannot force re-cluster
+thrash.  Corruption generators for exercising all of this live in
+``repro.data.synthetic`` (``CorruptionSpec``) and the scenario matrix in
+``repro.launch.membership``.
 """
 from __future__ import annotations
 
@@ -61,6 +86,8 @@ __all__ = ["MembershipConfig", "MembershipEngine", "MembershipState",
            "AssignResult", "MEMBERSHIP_BACKENDS", "signature_relevance"]
 
 MEMBERSHIP_BACKENDS = ("numpy", "jnp", "pallas")
+AGGREGATORS = ("mean", "trimmed", "medians")
+DRIFT_STATS = ("max", "median")
 UNASSIGNED = -1
 
 
@@ -84,6 +111,22 @@ class MembershipConfig:
         exceeds this.
       eig_floor: relevance eigenvalue floor for the signature-only
         re-cluster similarity (same semantics as ``SimilarityConfig``).
+      aggregator: prototype statistic over member projectors — "mean"
+        (streaming, breakdown point 0), "trimmed" (coordinate-wise
+        trimmed mean, resists up to a ``trim_frac`` fraction of
+        Byzantine members per cluster) or "medians" (coordinate-wise
+        median-of-means over ``mom_groups`` member groups).  The
+        resistant modes recompute prototypes from the live table on
+        admit/evict (windowed recompute) instead of the streaming
+        update.
+      trim_frac: per-end trim fraction for ``aggregator="trimmed"``,
+        in [0, 0.5).
+      mom_groups: member-group count for ``aggregator="medians"``; the
+        statistic resists corruption while fewer than half the occupied
+        groups contain a poisoned member.
+      drift_stat: "max" trips ``recluster_proto_shift`` on the worst
+        per-cluster prototype shift (the PR-5 statistic); "median" on
+        the median shift — robust to a single poisoned prototype.
       linkage: HAC linkage handed to the ``ClusterEngine`` on re-cluster.
       compute_dtype: pallas assign kernel precision — "bf16" matmul
         inputs with fp32 accumulation (default) or exact "fp32".
@@ -98,6 +141,10 @@ class MembershipConfig:
     recluster_unassigned_frac: float = 0.25
     recluster_proto_shift: float = 0.75
     eig_floor: float = 1e-6
+    aggregator: str = "mean"
+    trim_frac: float = 0.1
+    mom_groups: int = 5
+    drift_stat: str = "max"
     linkage: str = "average"
     compute_dtype: str = "bf16"
     interpret: bool | None = None
@@ -117,6 +164,18 @@ class MembershipConfig:
         if self.eig_floor <= 0:
             raise ValueError(f"eig_floor must be positive, "
                              f"got {self.eig_floor}")
+        if self.aggregator not in AGGREGATORS:
+            raise ValueError(f"aggregator must be one of {AGGREGATORS}, "
+                             f"got {self.aggregator!r}")
+        if not 0.0 <= self.trim_frac < 0.5:
+            raise ValueError(f"trim_frac must be in [0, 0.5), "
+                             f"got {self.trim_frac}")
+        if self.mom_groups < 1:
+            raise ValueError(f"mom_groups must be >= 1, "
+                             f"got {self.mom_groups}")
+        if self.drift_stat not in DRIFT_STATS:
+            raise ValueError(f"drift_stat must be one of {DRIFT_STATS}, "
+                             f"got {self.drift_stat!r}")
         if self.compute_dtype not in ("fp32", "bf16"):
             raise ValueError(f"compute_dtype must be 'fp32' or 'bf16', "
                              f"got {self.compute_dtype!r}")
@@ -180,6 +239,63 @@ def _protos_from_table(v, labels, valid, *, n_clusters: int):
     outer = jnp.einsum("cdk,cek->cde", v, v)                 # (cap, d, d)
     protos = jnp.einsum("ct,cde->tde", member, outer)
     return protos / jnp.maximum(counts, 1.0)[:, None, None], counts
+
+
+@partial(jax.jit, static_argnames=("n_clusters", "aggregator", "trim_frac",
+                                   "mom_groups"))
+def _protos_from_table_robust(v, labels, valid, *, n_clusters: int,
+                              aggregator: str, trim_frac: float,
+                              mom_groups: int):
+    """Resistant per-cluster prototype statistics over member projectors.
+
+    "trimmed": per coordinate of the flattened ``V_i V_i^T``, drop the
+    ``floor(m * trim_frac)`` smallest and largest member values and
+    average the rest — bounded influence for up to a ``trim_frac``
+    fraction of Byzantine members per cluster.
+
+    "medians": members are split round-robin (by live-slot rank) into
+    ``mom_groups`` groups; the prototype is the coordinate-wise median
+    of the group means — resists corruption while fewer than half the
+    occupied groups are poisoned.
+
+    Order statistics do not stream, so this is the *windowed recompute*
+    the resistant admit/evict paths pay; one ``lax.map`` over clusters
+    keeps peak memory at one (cap, d*d) sort per cluster.
+    """
+    cap, d, _k = v.shape
+    member = (labels[:, None] == jnp.arange(n_clusters)[None]) \
+        & valid[:, None]                                     # (cap, T)
+    counts = member.sum(axis=0).astype(jnp.float32)
+    outer = jnp.einsum("cdk,cek->cde", v, v).reshape(cap, d * d)
+
+    def trimmed(mem_t):
+        m = mem_t.sum().astype(jnp.int32)
+        g = jnp.floor(m.astype(jnp.float32) * trim_frac).astype(jnp.int32)
+        # non-members sort to the top end; kept ranks stay below m - g
+        s = jnp.sort(jnp.where(mem_t[:, None], outer, jnp.inf), axis=0)
+        rank = jnp.arange(cap, dtype=jnp.int32)[:, None]
+        keep = (rank >= g) & (rank < m - g)
+        kept = jnp.where(keep, s, 0.0)                       # inf never kept
+        return kept.sum(axis=0) / jnp.maximum(m - 2 * g, 1)
+
+    def medians(mem_t):
+        rank = jnp.cumsum(mem_t) - 1                         # rank among live
+        gid = jnp.where(mem_t, rank % mom_groups, mom_groups)
+        onehot = (gid[:, None] == jnp.arange(mom_groups)[None]
+                  ).astype(jnp.float32)                      # (cap, G)
+        gcnt = onehot.sum(axis=0)                            # (G,)
+        gsum = onehot.T @ jnp.where(mem_t[:, None], outer, 0.0)
+        gmean = gsum / jnp.maximum(gcnt, 1.0)[:, None]
+        nv = (gcnt > 0).sum().astype(jnp.int32)
+        s = jnp.sort(jnp.where((gcnt > 0)[:, None], gmean, jnp.inf), axis=0)
+        lo = jnp.clip((nv - 1) // 2, 0, mom_groups - 1)
+        hi = jnp.clip(nv // 2, 0, mom_groups - 1)
+        med = (jnp.take(s, lo, axis=0) + jnp.take(s, hi, axis=0)) / 2.0
+        return jnp.where(nv > 0, med, 0.0)
+
+    one = trimmed if aggregator == "trimmed" else medians
+    protos = jax.lax.map(one, member.T)                      # (T, d*d)
+    return protos.reshape(n_clusters, d, d).astype(jnp.float32), counts
 
 
 def _apply_floors(labels, best, margin, affinity_floor, margin_floor):
@@ -341,9 +457,17 @@ class MembershipEngine:
         return self.state
 
     def _rebuild_protos(self, v, labels, valid, n_clusters: int):
+        agg = self.cfg.aggregator
         if self.on_device:
-            return _protos_from_table(v, labels, valid,
-                                      n_clusters=n_clusters)
+            if agg == "mean":
+                return _protos_from_table(v, labels, valid,
+                                          n_clusters=n_clusters)
+            return _protos_from_table_robust(
+                v, labels, valid, n_clusters=n_clusters, aggregator=agg,
+                trim_frac=self.cfg.trim_frac,
+                mom_groups=self.cfg.mom_groups)
+        if agg != "mean":
+            return self._np_robust_protos(v, labels, valid, n_clusters)
         member = ((np.asarray(labels)[:, None] == np.arange(n_clusters))
                   & np.asarray(valid)[:, None]).astype(np.float32)
         counts = member.sum(axis=0)
@@ -351,6 +475,36 @@ class MembershipEngine:
         protos = (np.einsum("ct,cde->tde", member, outer)
                   / np.maximum(counts, 1.0)[:, None, None])
         return protos.astype(np.float32), counts.astype(np.float32)
+
+    def _np_robust_protos(self, v, labels, valid, n_clusters: int):
+        """Host reference of the resistant aggregators — an independent
+        implementation on purpose (backend agreement is parity-TESTED,
+        not shared-by-construction, same contract as ``assign``)."""
+        v = np.asarray(v, np.float32)
+        labels, valid = np.asarray(labels), np.asarray(valid)
+        d = v.shape[1]
+        protos = np.zeros((n_clusters, d, d), np.float32)
+        counts = np.zeros((n_clusters,), np.float32)
+        for t in range(n_clusters):
+            mem = np.flatnonzero((labels == t) & valid)
+            counts[t] = len(mem)
+            if not len(mem):
+                continue
+            outers = np.einsum("cdk,cek->cde", v[mem], v[mem]
+                               ).reshape(len(mem), d * d)
+            m = len(mem)
+            if self.cfg.aggregator == "trimmed":
+                g = int(np.floor(m * self.cfg.trim_frac))
+                flat = np.sort(outers, axis=0)[g:m - g].mean(axis=0)
+            else:                                            # medians
+                gid = np.arange(m) % self.cfg.mom_groups
+                gmeans = np.stack(
+                    [outers[gid == j].mean(axis=0)
+                     for j in range(self.cfg.mom_groups)
+                     if (gid == j).any()])
+                flat = np.median(gmeans, axis=0)
+            protos[t] = flat.reshape(d, d)
+        return protos, counts
 
     # -- assignment ---------------------------------------------------------
 
@@ -440,24 +594,31 @@ class MembershipEngine:
     def admit(self, lam, v, labels) -> np.ndarray:
         """Append an assigned wave to the table (streaming-mean prototype
         update; unassigned rows join the table but no prototype).
-        Returns the occupied slot indices (for a later ``evict``)."""
+        Resistant aggregators cannot down-/up-date order statistics in
+        O(1), so they pay a windowed recompute over the live table
+        instead.  Returns the occupied slot indices (for ``evict``)."""
         st = self._require_state()
         lam = np.asarray(lam, np.float32)
         slots = self._free_slots(lam.shape[0])
         labels = np.asarray(labels, np.int32)
+        streaming = self.cfg.aggregator == "mean"
         if self.on_device:
             v_w = jnp.asarray(v, jnp.float32)
             lab_w = jnp.asarray(labels)
             sl = jnp.asarray(slots)
-            delta, m = _wave_outer_sums(v_w, lab_w, st.counts)
-            protos, counts = _proto_update(st.protos, st.counts, delta, m,
-                                           sign=1.0)
+            lam_t = st.lam.at[sl].set(jnp.asarray(lam))
+            v_t = st.v.at[sl].set(v_w)
+            lab_t = st.labels.at[sl].set(lab_w)
+            valid = st.valid.at[sl].set(True)
+            if streaming:
+                delta, m = _wave_outer_sums(v_w, lab_w, st.counts)
+                protos, counts = _proto_update(st.protos, st.counts,
+                                               delta, m, sign=1.0)
+            else:
+                protos, counts = self._rebuild_protos(v_t, lab_t, valid,
+                                                      st.n_clusters)
             self.state = dataclasses.replace(
-                st,
-                lam=st.lam.at[sl].set(jnp.asarray(lam)),
-                v=st.v.at[sl].set(v_w),
-                labels=st.labels.at[sl].set(lab_w),
-                valid=st.valid.at[sl].set(True),
+                st, lam=lam_t, v=v_t, labels=lab_t, valid=valid,
                 protos=protos, counts=counts)
             return slots
         v = np.asarray(v, np.float32)
@@ -465,7 +626,11 @@ class MembershipEngine:
         lab_t, valid = st.labels.copy(), st.valid.copy()
         lam_t[slots], v_t[slots], lab_t[slots], valid[slots] = \
             lam, v, labels, True
-        protos, counts = self._np_proto_shift(st, v, labels, +1.0)
+        if streaming:
+            protos, counts = self._np_proto_shift(st, v, labels, +1.0)
+        else:
+            protos, counts = self._rebuild_protos(v_t, lab_t, valid,
+                                                  st.n_clusters)
         self.state = dataclasses.replace(
             st, lam=lam_t, v=v_t, labels=lab_t, valid=valid,
             protos=protos, counts=counts)
@@ -485,22 +650,32 @@ class MembershipEngine:
             raise ValueError(f"evicting empty slots "
                              f"{slots[~occupied].tolist()}")
         labels_out = np.asarray(st.labels)[slots]
+        streaming = self.cfg.aggregator == "mean"
         if self.on_device:
             sl = jnp.asarray(slots)
-            delta, m = _wave_outer_sums(st.v[sl], jnp.asarray(labels_out),
-                                        st.counts)
-            protos, counts = _proto_update(st.protos, st.counts, delta, m,
-                                           sign=-1.0)
+            lab_t = st.labels.at[sl].set(UNASSIGNED)
+            valid = st.valid.at[sl].set(False)
+            if streaming:
+                delta, m = _wave_outer_sums(st.v[sl],
+                                            jnp.asarray(labels_out),
+                                            st.counts)
+                protos, counts = _proto_update(st.protos, st.counts,
+                                               delta, m, sign=-1.0)
+            else:
+                protos, counts = self._rebuild_protos(st.v, lab_t, valid,
+                                                      st.n_clusters)
             self.state = dataclasses.replace(
-                st,
-                labels=st.labels.at[sl].set(UNASSIGNED),
-                valid=st.valid.at[sl].set(False),
+                st, labels=lab_t, valid=valid,
                 protos=protos, counts=counts)
             return
         lab_t, valid = st.labels.copy(), st.valid.copy()
-        protos, counts = self._np_proto_shift(st, np.asarray(st.v)[slots],
-                                              labels_out, -1.0)
         lab_t[slots], valid[slots] = UNASSIGNED, False
+        if streaming:
+            protos, counts = self._np_proto_shift(
+                st, np.asarray(st.v)[slots], labels_out, -1.0)
+        else:
+            protos, counts = self._rebuild_protos(st.v, lab_t, valid,
+                                                  st.n_clusters)
         self.state = dataclasses.replace(st, labels=lab_t, valid=valid,
                                          protos=protos, counts=counts)
 
@@ -522,17 +697,23 @@ class MembershipEngine:
 
     def drift_stats(self) -> dict:
         """The two trigger statistics: unassigned fraction of the live
-        table and the worst relative prototype Frobenius shift since the
-        last (re)cluster."""
+        table and the relative prototype Frobenius shift since the last
+        (re)cluster — the worst per-cluster shift by default, the median
+        under ``drift_stat="median"`` (one poisoned prototype then
+        cannot trip re-cluster thrash on its own)."""
         st = self._require_state()
         n = max(st.n_members, 1)
         p, p0 = np.asarray(st.protos), np.asarray(st.protos0)
         shift = np.linalg.norm((p - p0).reshape(st.n_clusters, -1), axis=1)
         base = np.maximum(
             np.linalg.norm(p0.reshape(st.n_clusters, -1), axis=1), 1e-6)
+        rel = shift / base
+        stat = (np.median(rel) if self.cfg.drift_stat == "median"
+                else rel.max())
         return {
             "unassigned_frac": st.n_unassigned / n,
-            "proto_shift": float((shift / base).max()),
+            "proto_shift": float(stat),
+            "proto_shift_max": float(rel.max()),
             "n_members": st.n_members,
             "n_reclusters": st.n_reclusters,
         }

@@ -31,7 +31,12 @@ LossFn = Callable[[PyTree, dict], jax.Array]
 
 __all__ = ["ClientConfig", "local_update", "fused_lps_round",
            "masked_lps_round", "sample_batch_indices",
+           "participation_mask",
            "make_keyed_batch_stack", "make_batches", "make_batch_stack"]
+
+# fold_in tag separating the participation stream from the batch stream
+# (both derive from the same per-cluster round key)
+_PARTICIPATION_FOLD = 7451
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,6 +135,27 @@ def sample_batch_indices(key: jax.Array, steps: int, batch_size: int,
     r = jax.random.randint(key, (steps, batch_size), 0, jnp.int32(2**31 - 1),
                            dtype=jnp.int32)
     return r % jnp.maximum(jnp.asarray(n, jnp.int32), 1)
+
+
+def participation_mask(round_key: jax.Array, uids, rate) -> jax.Array:
+    """Per-round straggler/dropout mask: client ``uid`` participates iff
+    its keyed uniform draw clears ``rate`` (the expected dropout
+    fraction).  Keyed off ``(round_key, uid)`` through a dedicated
+    fold-in tag, so the draw is independent of the batch stream,
+    invariant to cluster numbering, and IDENTICAL whether evaluated
+    host-side (reference loop) or in-jit under the fused trainer's vmap
+    — the same contract as ``sample_batch_indices``.  ``rate`` may be a
+    traced scalar: ``rate == 0.0`` reproduces full participation
+    exactly (uniform draws live in [0, 1)), so threading it through the
+    fused super-stack costs no retrace.
+
+    Returns a float32 ``(C,)`` mask, 1.0 = participating.
+    """
+    pk = jax.random.fold_in(round_key, _PARTICIPATION_FOLD)
+    uids = jnp.asarray(uids, jnp.int32)
+    draws = jax.vmap(
+        lambda u: jax.random.uniform(jax.random.fold_in(pk, u)))(uids)
+    return (draws >= rate).astype(jnp.float32)
 
 
 def make_keyed_batch_stack(datasets: Sequence[tuple], uids: Sequence[int],

@@ -85,6 +85,7 @@ class MTHFLConfig:
     backend: str = "jnp"           # fused execution: jnp | shard_map
     mesh_axis: str = "clusters"    # mesh axis the cluster dim shards over
     scan_rounds: bool = False      # fused: lax.scan the GLOBAL rounds too
+    dropout_frac: float = 0.0      # per-global-round straggler/dropout rate
 
 
 @dataclasses.dataclass
@@ -198,19 +199,31 @@ def _stackable(params_list: Sequence[PyTree]) -> bool:
 # Fused path: one device-resident program per global round (or per run)
 # ---------------------------------------------------------------------------
 
-def _round_body(p_stack, g, x, y, n_per, uids, mask, dkeys, cluster_w, *,
+def _round_body(p_stack, g, x, y, n_per, uids, mask, dkeys, cluster_w,
+                part_rate, *,
                 loss_fn, optimizer, clip_norm, steps, batch_size,
                 local_rounds, is_common, axis):
     """One GLOBAL round, traceable: scan local rounds (each local round =
     masked LPS round vmapped over the cluster axis), then the in-jit GPS
     common-layer average.  ``axis`` names the mesh axis when the cluster
-    dim is sharded under shard_map."""
+    dim is sharded under shard_map.
+
+    ``part_rate`` is a TRACED dropout scalar: a per-global-round keyed
+    participation draw (``fed_client.participation_mask``) folds into
+    the existing membership-mask weighting, so stragglers/dropouts cost
+    no retrace — at rate 0.0 the mask is untouched and the program is
+    bit-identical to the no-dropout one.  A fully-dropped cluster keeps
+    its params (``masked_lps_round``'s empty-mask path) and reports a
+    NaN round loss, exactly like an empty cluster."""
 
     def local_round(p, l):
         def per_cluster(p_t, dk, x_t, y_t, n_t, uid_t, m_t):
-            rk = jax.random.fold_in(jax.random.fold_in(dk, g), l)
+            rk_g = jax.random.fold_in(dk, g)
+            m_eff = m_t * fed_client.participation_mask(rk_g, uid_t,
+                                                        part_rate)
+            rk = jax.random.fold_in(rk_g, l)
             return fed_client.masked_lps_round(
-                p_t, x_t, y_t, n_t, uid_t, m_t, rk, loss_fn, optimizer,
+                p_t, x_t, y_t, n_t, uid_t, m_eff, rk, loss_fn, optimizer,
                 clip_norm, steps, batch_size)
 
         return jax.vmap(per_cluster)(p, dkeys, x, y, n_per, uids, mask)
@@ -223,14 +236,14 @@ def _round_body(p_stack, g, x, y, n_per, uids, mask, dkeys, cluster_w, *,
     return p_stack, mean_loss
 
 
-def _run_scanned(p_stack, x, y, n_per, uids, mask, dkeys, cluster_w, *,
-                 global_rounds, **kw):
+def _run_scanned(p_stack, x, y, n_per, uids, mask, dkeys, cluster_w,
+                 part_rate, *, global_rounds, **kw):
     """The whole run in one program: scan ``_round_body`` over the global
     rounds, emitting each round's params for host-side evaluation."""
 
     def body(p, g):
         p, loss = _round_body(p, g, x, y, n_per, uids, mask, dkeys,
-                              cluster_w, **kw)
+                              cluster_w, part_rate, **kw)
         return p, (loss, p)
 
     _, (losses, stacks) = jax.lax.scan(body, p_stack,
@@ -256,7 +269,7 @@ def _sharded_round_fn(mesh: Mesh, axis: str, statics_vals: tuple):
     spec_c = P(axis)
     return jax.jit(shard_map(
         partial(_round_body, **statics, axis=axis), mesh=mesh,
-        in_specs=(spec_c, P()) + (spec_c,) * 7,
+        in_specs=(spec_c, P()) + (spec_c,) * 7 + (P(),),
         out_specs=(spec_c, spec_c), check_rep=False))
 
 
@@ -268,7 +281,7 @@ def _sharded_run_fn(mesh: Mesh, axis: str, statics_vals: tuple,
     return jax.jit(shard_map(
         partial(_run_scanned, **statics, axis=axis,
                 global_rounds=global_rounds),
-        mesh=mesh, in_specs=(spec_c,) * 8,
+        mesh=mesh, in_specs=(spec_c,) * 8 + (P(),),
         out_specs=(P(None, axis), P(None, axis)), check_rep=False))
 
 
@@ -354,8 +367,11 @@ def _train_fused(users, labels, models, eval_sets, cfg: MTHFLConfig,
         run_fn = partial(_fused_run, **body_statics,
                          global_rounds=cfg.global_rounds)
 
+    # Dropout rate rides as a TRACED scalar (replicated under shard_map):
+    # changing it between runs re-dispatches, never retraces.
+    part_rate = jnp.asarray(cfg.dropout_frac, jnp.float32)
     args = (data["x"], data["y"], data["n_per"], data["uids"], data["mask"],
-            data["dkeys"], data["cluster_w"])
+            data["dkeys"], data["cluster_w"], part_rate)
 
     acc_hist = np.zeros((cfg.global_rounds, n_clusters))
     loss_hist = np.zeros((cfg.global_rounds, n_clusters))
@@ -404,17 +420,27 @@ def _train_reference(users, labels, models, eval_sets, cfg: MTHFLConfig,
                 loss_hist[g, t] = np.nan
                 continue
             p = lps_params[t]
-            ns = jnp.asarray(setup.n_samples[t], jnp.float32)
+            rk_g = jax.random.fold_in(setup.data_keys[t], g)
+            # Same keyed per-round participation draw as the fused path;
+            # dropped clients keep weight 0 in the FedAvg and are
+            # excluded from the round loss.
+            pmask = np.asarray(fed_client.participation_mask(
+                rk_g, setup.uids[t], cfg.dropout_frac))
+            if pmask.sum() == 0:               # whole cluster dropped
+                loss_hist[g, t] = np.nan
+                continue
+            ns = jnp.asarray(setup.n_samples[t], jnp.float32) \
+                * jnp.asarray(pmask)
             round_losses = []
             for l in range(cfg.local_rounds):
-                rk = jax.random.fold_in(
-                    jax.random.fold_in(setup.data_keys[t], g), l)
+                rk = jax.random.fold_in(rk_g, l)
                 batches = fed_client.make_keyed_batch_stack(
                     setup.datasets[t], setup.uids[t], rk, cfg.batch_size,
                     cfg.local_steps)
                 p, losses = fed_client.fused_lps_round(
                     p, batches, ns, models[t].loss_fn, cfg.client)
-                round_losses.append(float(jnp.mean(losses)))
+                round_losses.append(
+                    float(np.mean(np.asarray(losses)[pmask > 0])))
             lps_params[t] = p
             loss_hist[g, t] = float(np.mean(round_losses))
         # GPS round: average common layers, broadcast (empty clusters carry
@@ -474,6 +500,9 @@ def train_mthfl(users: Sequence,                      # list[UserData-like]
     if cfg.backend not in TRAINER_BACKENDS:
         raise ValueError(f"cfg.backend must be one of {TRAINER_BACKENDS}, "
                          f"got {cfg.backend!r}")
+    if not 0.0 <= cfg.dropout_frac < 1.0:
+        raise ValueError("cfg.dropout_frac must be in [0, 1), got "
+                         f"{cfg.dropout_frac!r}")
     setup = _setup_clusters(users, labels, n_clusters, cfg.seed,
                             cluster_classes)
     lps_params = [models[t].init(setup.init_keys[t])

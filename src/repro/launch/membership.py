@@ -5,23 +5,44 @@ one-shot protocol on a seed population, build the cluster directory, then
 stream synthetic arrival waves with churn (evictions) and task drift
 (newcomers from a subspace the seed never saw), reporting per-wave
 assignment accuracy vs the oracle, the unassigned fraction, and every
-drift-triggered re-cluster event:
+drift-triggered re-cluster event.
 
-  # 64 seed users, 6 waves of 16 arrivals, 4 evictions per wave
-  PYTHONPATH=src python -m repro.launch.membership --seed-users 64 \\
-      --waves 6 --wave-size 16 --evict 4
+Dirty-data scenarios (``data.synthetic`` injectors) turn the launcher
+into a robustness harness.  Each cell of the scenario matrix is a
+(scenario, arrival-pattern) pair:
 
-  # drift: from wave 3 on, half of each wave comes from an unseen task
-  PYTHONPATH=src python -m repro.launch.membership --drift-frac 0.5 \\
-      --drift-after 3 --backend jnp
+  scenario      what is corrupted
+  ------------  -----------------------------------------------------
+  clean         nothing — the PR-5/6 serving loop
+  label-noise   ``--corrupt-frac`` of every arrival's feature rows are
+                swapped with rows from a different task (mislabelled
+                client data entering the Gram signature)
+  byzantine     ``--corrupt-frac`` of each wave uploads adversarial
+                signatures (``--byzantine-mode``); colluding attackers
+                poison admitted prototypes toward the NEXT cluster
+  drift         half of each late wave arrives from a task the seed
+                never saw (the PR-5 drift path, as a matrix cell)
 
-  # fused pallas assignment kernel
-  PYTHONPATH=src python -m repro.launch.membership --backend pallas
+  arrivals      wave sizes
+  ------------  -----------------------------------------------------
+  steady        ``--wave-size`` every wave
+  bursty        alternating half / one-and-a-half waves (same total)
 
-  # hierarchical seeding: cluster 512 seed users in 8 edge groups
-  # (core.hierarchy) — the directory serves the result unchanged
-  PYTHONPATH=src python -m repro.launch.membership --seed-users 512 \\
-      --seed-groups 8
+  # one cell, full per-wave trace
+  PYTHONPATH=src python -m repro.launch.membership --scenario byzantine \\
+      --aggregator trimmed --corrupt-frac 0.2
+
+  # the whole 4 x 2 matrix, one summary row per cell (+ JSON dump)
+  PYTHONPATH=src python -m repro.launch.membership --matrix \\
+      --aggregator medians --json /tmp/matrix.json
+
+  # CI smoke: tiny population, 3 waves
+  PYTHONPATH=src python -m repro.launch.membership --scenario label-noise \\
+      --quick
+
+Accuracy is measured over HONEST arrivals from seed-known tasks only —
+Byzantine uploads and drift newcomers have no oracle cluster to be right
+about; what matters is whether they drag honest assignments down.
 
 The loop also maintains the trainer-side ``(T, C_max)`` super-stack
 layout through ``fed.partition.admit_layout`` — the warm-start hook that
@@ -31,37 +52,30 @@ fused trainer.
 from __future__ import annotations
 
 import argparse
+import json
 import time
+import zlib
 
 import numpy as np
 
+SCENARIOS = ("clean", "label-noise", "byzantine", "drift")
+ARRIVAL_PATTERNS = ("steady", "bursty")
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--seed-users", type=int, default=64)
-    ap.add_argument("--seed-groups", type=int, default=0,
-                    help="> 0 clusters the seed via the hierarchical "
-                         "two-level protocol (this many edge groups) "
-                         "instead of the flat O(N^2) path")
-    ap.add_argument("--samples", type=int, default=48)
-    ap.add_argument("--dim", type=int, default=32)
-    ap.add_argument("--tasks", type=int, default=4)
-    ap.add_argument("--top-k", type=int, default=8)
-    ap.add_argument("--waves", type=int, default=6)
-    ap.add_argument("--wave-size", type=int, default=16)
-    ap.add_argument("--evict", type=int, default=4,
-                    help="members evicted (churn) after each wave")
-    ap.add_argument("--drift-frac", type=float, default=0.0,
-                    help="fraction of each post --drift-after wave drawn "
-                         "from a task the seed never saw")
-    ap.add_argument("--drift-after", type=int, default=3)
-    ap.add_argument("--backend", default="jnp",
-                    choices=["numpy", "jnp", "pallas"])
-    ap.add_argument("--margin-floor", type=float, default=0.05)
-    ap.add_argument("--unassigned-frac", type=float, default=0.25)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
 
+def wave_plan(pattern: str, waves: int, wave_size: int) -> list[int]:
+    """Per-wave arrival counts; every pattern admits the same total."""
+    if pattern == "steady":
+        return [wave_size] * waves
+    lo = wave_size // 2
+    hi = 2 * wave_size - lo
+    sizes = [lo if w % 2 == 0 else hi for w in range(waves)]
+    sizes[-1] += waves * wave_size - sum(sizes)   # odd-length tail
+    return sizes
+
+
+def run_cell(args, scenario: str, arrivals: str,
+             verbose: bool = True) -> dict:
+    """One (scenario, arrival-pattern) cell: seed -> waves -> summary."""
     import jax.numpy as jnp
 
     from repro.core import clustering as clu
@@ -73,10 +87,16 @@ def main() -> None:
     from repro.data import synthetic as syn
     from repro.fed import partition as fpart
 
+    # Corruption streams are decoupled from the data stream so every cell
+    # serves the SAME population (crc32: stable across processes).
+    cseed = zlib.crc32(f"{scenario}|{arrivals}|{args.seed}".encode())
+    drift_frac = (args.drift_frac or 0.5) if scenario == "drift" else 0.0
+    sizes = wave_plan(arrivals, args.waves, args.wave_size)
+
     # One mixture over tasks+1 subspaces: the extra task is the DRIFT
     # source — it exists in the generator so drift arrivals share its
     # subspace, but no seed user is drawn from it.
-    n_total = args.seed_users + args.waves * args.wave_size
+    n_total = args.seed_users + sum(sizes)
     feats_all, tids_all = syn.make_task_feature_mixture(
         2 * n_total, args.samples, args.dim, args.tasks + 1,
         seed=args.seed)
@@ -98,35 +118,45 @@ def main() -> None:
     seed_labels = np.asarray(res.labels)
     seed_tasks = tids_all[seed_idx]
     seed_acc = clu.clustering_accuracy(seed_labels, seed_tasks)
-    how = (f"hierarchical ({args.seed_groups} groups)" if args.seed_groups
-           else "one-shot")
-    print(f"seed: {args.seed_users} users, {how} protocol + HAC in "
-          f"{time.time() - t0:.2f}s, clustering accuracy {seed_acc:.1%}")
+    if verbose:
+        how = (f"hierarchical ({args.seed_groups} groups)"
+               if args.seed_groups else "one-shot")
+        print(f"seed: {args.seed_users} users, {how} protocol + HAC in "
+              f"{time.time() - t0:.2f}s, clustering accuracy "
+              f"{seed_acc:.1%}")
 
-    # cluster id -> oracle task id (majority vote over the seed).
+    # cluster id -> oracle task id (majority vote over the seed) and the
+    # inverse map the colluding attack needs to aim at a NEIGHBOUR.
     task_of_cluster = np.full(args.tasks, -1)
     for t in range(args.tasks):
         members = seed_tasks[seed_labels == t]
         if len(members):
             task_of_cluster[t] = np.bincount(members).argmax()
+    cluster_of_task = np.arange(args.tasks)
+    for t, tau in enumerate(task_of_cluster):
+        if tau >= 0:
+            cluster_of_task[tau] = t
 
     cfg = MembershipConfig(
         backend=args.backend, margin_floor=args.margin_floor,
         recluster_unassigned_frac=args.unassigned_frac,
-        capacity=2 * n_total)
+        capacity=2 * n_total, aggregator=args.aggregator)
     engine = MembershipEngine.from_oneshot(res, cfg)
     led = res.ledger
-    print(f"directory: T={engine.state.n_clusters}, capacity "
-          f"{engine.state.capacity}, backend={args.backend} | arrival "
-          f"upload {led.assign_upload / 1024:.1f} KiB vs protocol "
-          f"per-user upload {led.per_user_upload / 1024:.1f} KiB")
+    if verbose:
+        print(f"directory: T={engine.state.n_clusters}, capacity "
+              f"{engine.state.capacity}, backend={args.backend}, "
+              f"aggregator={args.aggregator} | arrival upload "
+              f"{led.assign_upload / 1024:.1f} KiB vs protocol per-user "
+              f"upload {led.per_user_upload / 1024:.1f} KiB")
 
     # Trainer-side warm-start layout: headroom for every arrival, so the
     # (T, C_max) stack shape survives all waves without a retrace.
     # ``stack_coord`` maps each directory slot to its stack cell so
-    # evictions free their columns and admits refill the holes.
-    c_max = int(np.bincount(seed_labels, minlength=args.tasks).max()) \
-        + args.waves * args.wave_size
+    # evictions free their columns and admits refill the holes.  Sized
+    # for the worst case — a poisoned-directory recluster can pile EVERY
+    # live member into one cluster, not just the benign-drift spread.
+    c_max = args.seed_users + sum(sizes)
     rows0, slots0, stack_mask = fpart.stack_layout(res.labels, args.tasks,
                                                    c_max=c_max)
     stack_shape = stack_mask.shape
@@ -137,16 +167,31 @@ def main() -> None:
     rng = np.random.default_rng(args.seed)
     live_slots = list(range(args.seed_users))
     next_arrival = 0
-    for w in range(args.waves):
-        n_drift = (int(args.drift_frac * args.wave_size)
+    acc_traj: list[float] = []
+    recluster_waves: list[int] = []
+    for w, wave_size in enumerate(sizes):
+        n_drift = (int(drift_frac * wave_size)
                    if w >= args.drift_after else 0)
-        take = args.wave_size - n_drift
+        take = wave_size - n_drift
         idx = list(arrival_pool[next_arrival:next_arrival + take])
         next_arrival += take
         idx += list(rng.choice(drift_pool, n_drift, replace=False))
         wave_f, wave_t = feats_all[idx], tids_all[idx]
 
+        if scenario == "label-noise":
+            wave_f = syn.label_noise_rows(wave_f, wave_t,
+                                          args.corrupt_frac,
+                                          seed=cseed + w)
+
         lam_w, v_w, _ = sig_engine.signatures(jnp.asarray(wave_f))
+        byz = np.zeros(wave_size, bool)
+        if scenario == "byzantine":
+            lam_w, v_w, byz = syn.byzantine_signatures(
+                np.asarray(lam_w), np.asarray(v_w), args.corrupt_frac,
+                mode=args.byzantine_mode, seed=cseed + w,
+                labels=cluster_of_task[np.minimum(wave_t,
+                                                  args.tasks - 1)])
+
         t0 = time.time()
         out = engine.assign(lam_w, v_w)
         labels = np.asarray(out.labels)
@@ -155,10 +200,10 @@ def main() -> None:
         live_slots.extend(int(s) for s in slots)
 
         assigned = labels >= 0
-        known = wave_t < args.tasks
-        hits = task_of_cluster[labels[assigned & known]] == \
-            wave_t[assigned & known]
-        acc = hits.mean() if hits.size else float("nan")
+        honest = assigned & (wave_t < args.tasks) & ~byz
+        hits = task_of_cluster[labels[honest]] == wave_t[honest]
+        acc = float(hits.mean()) if hits.size else float("nan")
+        acc_traj.append(acc)
         rows, slot, stack_mask = fpart.admit_layout(stack_mask,
                                                     jnp.asarray(labels))
         for s, r, c, lb in zip(slots, np.asarray(rows), np.asarray(slot),
@@ -168,6 +213,7 @@ def main() -> None:
         stats = engine.drift_stats()
         event = engine.maybe_recluster()
         if event:
+            recluster_waves.append(w)
             # a relabel invalidates the column assignment; rebuild at the
             # SAME (T, C_max) — shape-stable, so still no retrace (the
             # trainer must re-scatter its per-user payloads, not
@@ -181,13 +227,15 @@ def main() -> None:
             stack_coord = {int(s): (int(r), int(c)) for s, r, c
                            in zip(live_idx, np.asarray(r2),
                                   np.asarray(c2))}
-        print(f"wave {w}: {args.wave_size} arrivals "
-              f"({n_drift} drift) assigned in {dt * 1e3:.1f} ms | "
-              f"accuracy {acc:.1%} | unassigned "
-              f"{stats['unassigned_frac']:.1%} | proto shift "
-              f"{stats['proto_shift']:.3f}"
-              + (" | RECLUSTER (stack re-scattered, not retraced)"
-                 if event else ""))
+        if verbose:
+            print(f"wave {w}: {wave_size} arrivals "
+                  f"({n_drift} drift, {int(byz.sum())} byzantine) "
+                  f"assigned in {dt * 1e3:.1f} ms | honest accuracy "
+                  f"{acc:.1%} | unassigned "
+                  f"{stats['unassigned_frac']:.1%} | proto shift "
+                  f"{stats['proto_shift']:.3f}"
+                  + (" | RECLUSTER (stack re-scattered, not retraced)"
+                     if event else ""))
 
         if args.evict and len(live_slots) > args.evict:
             gone = rng.choice(len(live_slots), args.evict, replace=False)
@@ -203,9 +251,101 @@ def main() -> None:
     n_in_stack = int(np.asarray(stack_mask).sum())
     final = engine.drift_stats()
     assert n_in_stack == final["n_members"] - engine.state.n_unassigned
-    print(f"final: {final['n_members']} members ({n_in_stack} in the "
-          f"stack), {final['n_reclusters']} re-cluster events, stack "
-          f"shape {stack_shape} unchanged (fused trainer never retraced)")
+    if verbose:
+        print(f"final: {final['n_members']} members ({n_in_stack} in the "
+              f"stack), {final['n_reclusters']} re-cluster events, stack "
+              f"shape {stack_shape} unchanged (fused trainer never "
+              f"retraced)")
+    traj = np.asarray(acc_traj)
+    return {
+        "scenario": scenario,
+        "arrivals": arrivals,
+        "aggregator": args.aggregator,
+        "backend": args.backend,
+        "corrupt_frac": (args.corrupt_frac
+                         if scenario in ("label-noise", "byzantine")
+                         else 0.0),
+        "byzantine_mode": (args.byzantine_mode
+                           if scenario == "byzantine" else None),
+        "seed_accuracy": float(seed_acc),
+        "accuracy_per_wave": [float(a) for a in acc_traj],
+        "mean_accuracy": (float(np.nanmean(traj))
+                          if np.isfinite(traj).any() else float("nan")),
+        "unassigned_frac": float(final["unassigned_frac"]),
+        "recluster_waves": recluster_waves,
+        "n_reclusters": int(final["n_reclusters"]),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed-users", type=int, default=64)
+    ap.add_argument("--seed-groups", type=int, default=0,
+                    help="> 0 clusters the seed via the hierarchical "
+                         "two-level protocol (this many edge groups) "
+                         "instead of the flat O(N^2) path")
+    ap.add_argument("--samples", type=int, default=48)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--tasks", type=int, default=4)
+    ap.add_argument("--top-k", type=int, default=8)
+    ap.add_argument("--waves", type=int, default=6)
+    ap.add_argument("--wave-size", type=int, default=16)
+    ap.add_argument("--evict", type=int, default=4,
+                    help="members evicted (churn) after each wave")
+    ap.add_argument("--drift-frac", type=float, default=0.0,
+                    help="fraction of each post --drift-after wave drawn "
+                         "from a task the seed never saw (drift scenario "
+                         "defaults to 0.5)")
+    ap.add_argument("--drift-after", type=int, default=3)
+    ap.add_argument("--backend", default="jnp",
+                    choices=["numpy", "jnp", "pallas"])
+    ap.add_argument("--margin-floor", type=float, default=0.05)
+    ap.add_argument("--unassigned-frac", type=float, default=0.25)
+    ap.add_argument("--scenario", default="clean", choices=SCENARIOS)
+    ap.add_argument("--arrivals", default="steady",
+                    choices=ARRIVAL_PATTERNS)
+    ap.add_argument("--matrix", action="store_true",
+                    help="run every (scenario, arrivals) cell and print "
+                         "one summary row per cell")
+    ap.add_argument("--aggregator", default="mean",
+                    choices=["mean", "trimmed", "medians"])
+    ap.add_argument("--corrupt-frac", type=float, default=0.2,
+                    help="corrupted fraction for label-noise (rows per "
+                         "user) / byzantine (users per wave)")
+    ap.add_argument("--byzantine-mode", default="colluding_copy",
+                    choices=["sign_flip", "random_subspace",
+                             "colluding_copy"])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run: 32 seed users, 3 waves of 8")
+    ap.add_argument("--json", default=None,
+                    help="write cell summaries to this path")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.quick:
+        args.seed_users, args.samples = 32, 16
+        args.waves, args.wave_size, args.evict = 3, 8, 2
+        args.drift_after = 1
+
+    if args.matrix:
+        cells = []
+        for scenario in SCENARIOS:
+            for arrivals in ARRIVAL_PATTERNS:
+                cell = run_cell(args, scenario, arrivals, verbose=False)
+                cells.append(cell)
+                print(f"{scenario:>12} x {arrivals:<7} | honest acc "
+                      f"{cell['mean_accuracy']:.1%} | unassigned "
+                      f"{cell['unassigned_frac']:.1%} | reclusters "
+                      f"{cell['n_reclusters']} (waves "
+                      f"{cell['recluster_waves']})")
+    else:
+        cells = [run_cell(args, args.scenario, args.arrivals,
+                          verbose=True)]
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(cells, fh, indent=2)
+        print(f"wrote {len(cells)} cell(s) to {args.json}")
 
 
 if __name__ == "__main__":

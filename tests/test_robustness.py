@@ -1,0 +1,364 @@
+"""Dirty-data serving tests (ISSUE 7).
+
+The robust-aggregator contract: ``trimmed``/``medians`` prototypes equal
+``mean`` on clean tables (and under degenerate settings exactly), stay
+bounded under ⌊m·f⌋ corrupted members where the mean flies off, agree
+across numpy/jnp backends, and produce IDENTICAL assignment verdicts on
+all three backends under corruption — the RCC-PFL failure mode (a plain
+mean prototype is O(1)-breakdown) must not reach the served labels.
+Also locked down: the streaming admit/evict path can never diverge from
+a fresh recompute (randomized-sequence parity incl. the count->0
+down-date edge), the corruption injectors are seeded and exact-count,
+and the median drift statistic ignores a single poisoned prototype.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import oneshot
+from repro.core.engine import ProtocolEngine
+from repro.core.membership_engine import (MembershipConfig,
+                                          MembershipEngine, UNASSIGNED,
+                                          _protos_from_table,
+                                          _protos_from_table_robust)
+from repro.core.similarity import SimilarityConfig
+from repro.data import synthetic as syn
+
+BACKENDS = ("numpy", "jnp", "pallas")
+N_SEED, N_TASKS, D, TOP_K = 24, 3, 16, 6
+CAP, TD, TK, TT = 32, 8, 4, 3          # tiny table for aggregator tests
+
+
+@pytest.fixture(scope="module")
+def seed_result():
+    feats, task_ids = syn.make_task_feature_mixture(
+        n_users=N_SEED, n_samples=48, d=D, n_tasks=N_TASKS, seed=7)
+    res = oneshot.one_shot_clustering(jnp.asarray(feats), N_TASKS,
+                                      cfg=SimilarityConfig(top_k=TOP_K))
+    return res, task_ids
+
+
+@pytest.fixture(scope="module")
+def wave():
+    feats, task_ids = syn.make_task_feature_mixture(
+        n_users=N_SEED + 9, n_samples=48, d=D, n_tasks=N_TASKS, seed=7)
+    lam, v, _ = ProtocolEngine(SimilarityConfig(top_k=TOP_K)).signatures(
+        jnp.asarray(feats[N_SEED:]))
+    return lam, v, task_ids[N_SEED:]
+
+
+def make_table(rng, n=20, cap=CAP, d=TD, k=TK, n_clusters=TT):
+    """Random signature table: n live members over n_clusters."""
+    v = rng.standard_normal((cap, d, k)).astype(np.float32)
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    labels = np.full(cap, UNASSIGNED, np.int32)
+    labels[:n] = rng.integers(0, n_clusters, n)
+    valid = np.zeros(cap, bool)
+    valid[:n] = True
+    return v, labels, valid
+
+
+def device_protos(v, labels, valid, agg, trim_frac=0.1, mom_groups=5):
+    if agg == "mean":
+        p, c = _protos_from_table(jnp.asarray(v), jnp.asarray(labels),
+                                  jnp.asarray(valid), n_clusters=TT)
+    else:
+        p, c = _protos_from_table_robust(
+            jnp.asarray(v), jnp.asarray(labels), jnp.asarray(valid),
+            n_clusters=TT, aggregator=agg, trim_frac=trim_frac,
+            mom_groups=mom_groups)
+    return np.asarray(p), np.asarray(c)
+
+
+def np_protos(v, labels, valid, agg, trim_frac=0.1, mom_groups=5):
+    eng = MembershipEngine(MembershipConfig(
+        backend="numpy", aggregator=agg, trim_frac=trim_frac,
+        mom_groups=mom_groups))
+    p, c = eng._rebuild_protos(v, labels, valid, TT)
+    return np.asarray(p), np.asarray(c)
+
+
+class TestRobustAggregators:
+    """trimmed/medians == mean on clean tables; bounded under poison."""
+
+    @pytest.mark.parametrize("agg", ["trimmed", "medians"])
+    @pytest.mark.parametrize("impl", [device_protos, np_protos])
+    def test_clean_equals_mean(self, rng, agg, impl):
+        # order statistics of a clean i.i.d. table are not EQUAL to its
+        # mean — but with trim g=0 / one MoM group they reduce to it.
+        v, labels, valid = make_table(rng)
+        kw = (dict(trim_frac=0.0) if agg == "trimmed"
+              else dict(mom_groups=1))
+        p, c = impl(v, labels, valid, agg, **kw)
+        p_mean, c_mean = np_protos(v, labels, valid, "mean")
+        np.testing.assert_allclose(p, p_mean, atol=1e-5)
+        np.testing.assert_array_equal(c, c_mean)
+
+    @pytest.mark.parametrize("agg", ["mean", "trimmed", "medians"])
+    def test_identical_members_exact(self, rng, agg):
+        # every robust statistic of identical samples IS the sample
+        v, labels, valid = make_table(rng, n=12)
+        for t in range(TT):
+            mem = np.flatnonzero((labels == t) & valid)
+            if len(mem):
+                v[mem] = v[mem[0]]
+        p, _ = device_protos(v, labels, valid, agg,
+                             trim_frac=0.25, mom_groups=3)
+        for t in range(TT):
+            mem = np.flatnonzero((labels == t) & valid)
+            if len(mem):
+                want = v[mem[0]] @ v[mem[0]].T
+                np.testing.assert_allclose(p[t], want, atol=1e-5)
+
+    @pytest.mark.parametrize("agg", ["trimmed", "medians"])
+    def test_np_jnp_parity(self, rng, agg):
+        v, labels, valid = make_table(rng, n=26)
+        kw = dict(trim_frac=0.2, mom_groups=5)
+        p_dev, c_dev = device_protos(v, labels, valid, agg, **kw)
+        p_np, c_np = np_protos(v, labels, valid, agg, **kw)
+        np.testing.assert_allclose(p_dev, p_np, atol=1e-5)
+        np.testing.assert_array_equal(c_dev, c_np)
+
+    @pytest.mark.parametrize("agg", ["trimmed", "medians"])
+    def test_bounded_under_corruption(self, rng, agg):
+        # floor(m * f) poisoned members: the mean moves by O(f * scale^2)
+        # while the resistant statistics stay near the clean prototype.
+        v, labels, valid = make_table(rng, n=30)
+        p_clean, _ = np_protos(v, labels, valid, "mean")
+        f, scale = 0.2, 10.0
+        v_bad = v.copy()
+        mem0 = np.flatnonzero((labels == 0) & valid)
+        n_bad = int(np.floor(len(mem0) * f))
+        assert n_bad >= 1
+        v_bad[mem0[:n_bad]] = scale * rng.standard_normal(
+            (n_bad, TD, TK)).astype(np.float32)
+        kw = dict(trim_frac=0.25, mom_groups=2 * n_bad + 1)
+        p_rob, _ = device_protos(v_bad, labels, valid, agg, **kw)
+        p_mean, _ = np_protos(v_bad, labels, valid, "mean")
+        dev_rob = np.linalg.norm(p_rob[0] - p_clean[0])
+        dev_mean = np.linalg.norm(p_mean[0] - p_clean[0])
+        assert dev_mean > 10 * dev_rob    # mean flies off, robust holds
+        assert dev_rob < np.linalg.norm(p_clean[0])
+
+
+class TestCorruptedVerdicts:
+    """Backends agree exactly on served labels under corruption, and
+    the resistant aggregators keep the oracle accuracy mean loses."""
+
+    @pytest.mark.parametrize("agg", ["mean", "trimmed", "medians"])
+    def test_backends_agree_under_corruption(self, seed_result, wave,
+                                             agg):
+        res, _ = seed_result
+        seed_labels = np.asarray(res.labels)
+        lam_c, v_c, _ = syn.byzantine_signatures(
+            np.asarray(res.lam), np.asarray(res.v), 0.25,
+            mode="colluding_copy", seed=5, labels=seed_labels)
+        lam_w, v_w, _ = wave
+        labels = []
+        for backend in BACKENDS:
+            eng = MembershipEngine(MembershipConfig(
+                backend=backend, aggregator=agg, trim_frac=0.3,
+                mom_groups=7))
+            eng.seed(lam_c, v_c, seed_labels, n_clusters=N_TASKS)
+            labels.append(np.asarray(eng.assign(lam_w, v_w).labels))
+        for got in labels[1:]:
+            np.testing.assert_array_equal(got, labels[0])
+
+    def test_robust_recovers_oracle(self, seed_result, wave):
+        res, seed_tasks = seed_result
+        seed_labels = np.asarray(res.labels)
+        task_of = np.array([np.bincount(
+            np.asarray(seed_tasks)[seed_labels == t]).argmax()
+            for t in range(N_TASKS)])
+        lam_c, v_c, _ = syn.byzantine_signatures(
+            np.asarray(res.lam), np.asarray(res.v), 0.25,
+            mode="colluding_copy", seed=5, labels=seed_labels)
+        lam_w, v_w, wave_tasks = wave
+
+        def acc(agg):
+            eng = MembershipEngine(MembershipConfig(
+                backend="jnp", aggregator=agg, trim_frac=0.3,
+                mom_groups=7))
+            eng.seed(lam_c, v_c, seed_labels, n_clusters=N_TASKS)
+            lab = np.asarray(eng.assign(lam_w, v_w).labels)
+            hit = (lab >= 0) & (task_of[np.maximum(lab, 0)] == wave_tasks)
+            return hit.mean()
+
+        assert acc("trimmed") >= 0.9
+        assert acc("mean") < acc("trimmed")
+
+
+class TestRobustLifecycle:
+    """Windowed recompute on admit/evict, and streaming-mean parity."""
+
+    @pytest.mark.parametrize("backend", ["numpy", "jnp"])
+    @pytest.mark.parametrize("agg", ["trimmed", "medians"])
+    def test_admit_evict_roundtrip(self, seed_result, wave, backend,
+                                   agg):
+        eng = MembershipEngine(MembershipConfig(
+            backend=backend, aggregator=agg, trim_frac=0.2,
+            mom_groups=3))
+        res, _ = seed_result
+        eng.seed(np.asarray(res.lam), np.asarray(res.v),
+                 np.asarray(res.labels), n_clusters=N_TASKS)
+        p0 = np.asarray(eng.state.protos)
+        lam_w, v_w, _ = wave
+        labels = np.asarray(eng.assign(lam_w, v_w).labels)
+        slots = eng.admit(lam_w, v_w, labels)
+        assert not np.allclose(np.asarray(eng.state.protos), p0)
+        eng.evict(slots)
+        np.testing.assert_allclose(np.asarray(eng.state.protos), p0,
+                                   atol=1e-5)
+
+    @pytest.mark.parametrize("backend", ["numpy", "jnp"])
+    def test_streaming_matches_recompute_randomized(self, backend):
+        # Satellite: the hand-rolled numpy streaming update and the
+        # jitted _proto_update must both equal a fresh recompute from
+        # the table after ANY admit/evict sequence — incl. a cluster
+        # emptied to count 0 (down-date edge: prototype resets to 0).
+        rng = np.random.default_rng(11)
+        eng = MembershipEngine(MembershipConfig(backend=backend,
+                                                capacity=CAP))
+        v0, labels0, valid0 = make_table(rng, n=9, n_clusters=TT)
+        lam0 = rng.standard_normal((9, TK)).astype(np.float32)
+        eng.seed(lam0, v0[:9], labels0[:9], n_clusters=TT)
+        live = list(range(9))
+        for step in range(12):
+            st = eng.state
+            if rng.random() < 0.5 and len(live) > 2:
+                k = int(rng.integers(1, 3))
+                gone = rng.choice(len(live), k, replace=False)
+                eng.evict([live[g] for g in gone])
+                live = [s for i, s in enumerate(live)
+                        if i not in set(gone.tolist())]
+            else:
+                k = int(rng.integers(1, 4))
+                lam_w = rng.standard_normal((k, TK)).astype(np.float32)
+                v_w = rng.standard_normal((k, TD, TK)).astype(np.float32)
+                lab_w = rng.integers(-1, TT, k).astype(np.int32)
+                slots = eng.admit(lam_w, v_w, lab_w)
+                live.extend(int(s) for s in slots)
+            st = eng.state
+            p_re, c_re = eng._rebuild_protos(st.v, st.labels, st.valid,
+                                             TT)
+            np.testing.assert_allclose(np.asarray(st.protos),
+                                       np.asarray(p_re), atol=1e-4)
+            np.testing.assert_allclose(np.asarray(st.counts),
+                                       np.asarray(c_re), atol=1e-5)
+        # empty cluster 0 completely: count -> 0, prototype -> exactly 0
+        lab_live = np.asarray(eng.state.labels)[live]
+        in0 = [s for s, l in zip(live, lab_live) if l == 0]
+        if in0:
+            eng.evict(in0)
+        assert np.asarray(eng.state.counts)[0] == 0
+        np.testing.assert_array_equal(
+            np.asarray(eng.state.protos)[0], 0.0)
+
+
+class TestInjectors:
+    """Seeded, exact-count, composable corruption."""
+
+    def test_corrupt_labels_exact_count_never_self(self, rng):
+        y = rng.integers(0, 5, 40).astype(np.int32)
+        out = syn.corrupt_labels(y, 0.3, 5, seed=1)
+        changed = out != y
+        assert changed.sum() == 12               # floor(0.3 * 40)
+        assert (out[changed] != y[changed]).all()
+        np.testing.assert_array_equal(
+            out, syn.corrupt_labels(y, 0.3, 5, seed=1))
+        assert (syn.corrupt_labels(y, 0.0, 5, seed=1) == y).all()
+
+    def test_label_noise_rows_counts(self, rng):
+        feats = rng.standard_normal((6, 10, 4)).astype(np.float32)
+        tids = np.array([0, 0, 1, 1, 2, 2])
+        out = syn.label_noise_rows(feats, tids, 0.3, seed=2)
+        for i in range(6):
+            assert (out[i] != feats[i]).any(axis=1).sum() == 3
+        # single-task population: no cross-task donor, untouched
+        same = syn.label_noise_rows(feats, np.zeros(6, int), 0.3, seed=2)
+        np.testing.assert_array_equal(same, feats)
+
+    def test_heavy_tail_touches_exact_users(self, rng):
+        feats = rng.standard_normal((10, 8, 4)).astype(np.float32)
+        out = syn.heavy_tail_noise(feats, 0.35, seed=3)
+        touched = (out != feats).any(axis=(1, 2))
+        assert touched.sum() == 3                # floor(0.35 * 10)
+
+    @pytest.mark.parametrize("mode", syn.BYZANTINE_MODES)
+    def test_byzantine_mask_and_honest_rows(self, rng, mode):
+        lam = rng.standard_normal((12, 4)).astype(np.float32)
+        v = rng.standard_normal((12, 8, 4)).astype(np.float32)
+        labels = np.arange(12) % 3
+        lam2, v2, mask = syn.byzantine_signatures(
+            lam, v, 0.25, mode=mode, seed=4, labels=labels)
+        assert mask.sum() == 3                   # floor(0.25 * 12)
+        np.testing.assert_array_equal(lam2[~mask], lam[~mask])
+        np.testing.assert_array_equal(v2[~mask], v[~mask])
+        assert (v2[mask] != v[mask]).any()
+
+    def test_colluding_copy_targets_neighbour(self, rng):
+        lam = rng.standard_normal((12, 4)).astype(np.float32)
+        v = rng.standard_normal((12, 8, 4)).astype(np.float32)
+        labels = np.arange(12) % 3
+        lam2, v2, mask = syn.byzantine_signatures(
+            lam, v, 0.25, mode="colluding_copy", seed=4, scale=8.0,
+            labels=labels)
+        for i in np.flatnonzero(mask):
+            vic_pool = np.flatnonzero(
+                ~mask & (labels == (labels[i] + 1) % 3))
+            assert any(np.allclose(v2[i], 8.0 * v[j]) for j in vic_pool)
+
+    def test_spec_validation_and_composition(self, rng):
+        with pytest.raises(ValueError):
+            syn.CorruptionSpec(flip_frac=1.5)
+        with pytest.raises(ValueError):
+            syn.CorruptionSpec(byzantine_mode="nope")
+        with pytest.raises(ValueError):
+            syn.byzantine_signatures(np.zeros((4, 2)),
+                                     np.zeros((4, 3, 2)), 0.5,
+                                     mode="nope")
+        feats = rng.standard_normal((6, 10, 4)).astype(np.float32)
+        tids = np.array([0, 0, 1, 1, 2, 2])
+        spec = syn.CorruptionSpec(flip_frac=0.2, heavy_tail_frac=0.5,
+                                  seed=9)
+        out = syn.apply_corruption(feats, tids, spec)
+        assert (out != feats).any()
+        np.testing.assert_array_equal(
+            out, syn.apply_corruption(feats, tids, spec))
+        clean = syn.apply_corruption(feats, tids, syn.CorruptionSpec())
+        np.testing.assert_array_equal(clean, feats)
+
+
+class TestRobustDrift:
+    """Median prototype-shift ignores one poisoned cluster."""
+
+    def test_median_stat_below_max(self, seed_result, wave):
+        res, _ = seed_result
+        lam_w, v_w, _ = wave
+
+        def shift(drift_stat):
+            eng = MembershipEngine(MembershipConfig(
+                backend="jnp", drift_stat=drift_stat))
+            eng.seed(np.asarray(res.lam), np.asarray(res.v),
+                     np.asarray(res.labels), n_clusters=N_TASKS)
+            # poison exactly ONE cluster's prototype via a huge admit
+            eng.admit(lam_w[:1], 50.0 * np.asarray(v_w[:1]),
+                      np.asarray([0], np.int32))
+            return eng.drift_stats()
+
+        s_max, s_med = shift("max"), shift("median")
+        assert s_max["proto_shift"] == s_max["proto_shift_max"]
+        assert s_med["proto_shift"] < s_med["proto_shift_max"]
+        assert s_med["proto_shift_max"] == pytest.approx(
+            s_max["proto_shift_max"])
+
+    @pytest.mark.parametrize("kw", [dict(aggregator="nope"),
+                                    dict(trim_frac=0.5),
+                                    dict(trim_frac=-0.1),
+                                    dict(mom_groups=0),
+                                    dict(drift_stat="mean")])
+    def test_config_validation(self, kw):
+        with pytest.raises(ValueError):
+            MembershipConfig(**kw)

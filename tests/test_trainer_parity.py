@@ -256,3 +256,69 @@ def test_shard_map_parity_4dev():
                          capture_output=True, text=True, timeout=600)
     assert res.returncode == 0, res.stderr[-2000:]
     assert "TRAINER_SHARD_PARITY_OK" in res.stdout
+
+
+class TestDropoutParity:
+    """Keyed straggler/dropout masks (ISSUE 7): the participation draw
+    is identical host-side and in-jit, rides as a traced scalar (rate
+    0.0 is bit-identical full participation), and the fused path under
+    dropout still reproduces the reference loop — including a fully
+    dropped cluster, which keeps its params, reports a NaN round loss,
+    but is STILL evaluated."""
+
+    def test_rate_zero_is_full_participation(self):
+        key = jax.random.PRNGKey(3)
+        mask = fclient.participation_mask(key, np.arange(40), 0.0)
+        assert (np.asarray(mask) == 1.0).all()
+
+    def test_host_equals_jit_and_uid_keyed(self):
+        key = jax.random.PRNGKey(3)
+        uids = np.array([5, 9, 2, 77])
+        host = np.asarray(fclient.participation_mask(key, uids, 0.5))
+        jitted = np.asarray(jax.jit(fclient.participation_mask)(
+            key, jnp.asarray(uids), jnp.float32(0.5)))
+        np.testing.assert_array_equal(host, jitted)
+        # the draw is keyed by uid, not position: permuting the uids
+        # permutes the mask
+        perm = np.array([2, 0, 3, 1])
+        shuffled = np.asarray(
+            fclient.participation_mask(key, uids[perm], 0.5))
+        np.testing.assert_array_equal(shuffled, host[perm])
+
+    def test_rate_is_traced_not_static(self):
+        traces = []
+
+        @jax.jit
+        def f(key, uids, rate):
+            traces.append(1)
+            return fclient.participation_mask(key, uids, rate)
+
+        key = jax.random.PRNGKey(0)
+        uids = jnp.arange(8)
+        full = f(key, uids, jnp.float32(0.0))
+        f(key, uids, jnp.float32(0.7))
+        assert len(traces) == 1          # rate change never retraces
+        assert (np.asarray(full) == 1.0).all()
+
+    def test_fused_matches_reference_with_dropout(self):
+        layout = LAYOUTS["T4-ragged-empty"]
+        ref = run(layout, fused=False, dropout_frac=0.5)
+        fus = run(layout, fused=True, dropout_frac=0.5)
+        assert_history_close(fus, ref)
+        scan = run(layout, fused=True, dropout_frac=0.5,
+                   scan_rounds=True)
+        assert_history_close(scan, ref)
+
+    def test_full_cluster_dropout_nan_loss_finite_accuracy(self):
+        hist = run(LAYOUTS["T4-ragged-empty"], fused=True,
+                   dropout_frac=0.5)
+        nonempty = [0, 1, 3]
+        dropped = np.isnan(hist.train_loss[:, nonempty])
+        assert dropped.any()             # seed 0 fully drops some round
+        # a dropped cluster skipped training but was still evaluated
+        assert np.isfinite(hist.accuracy[:, nonempty]).all()
+
+    @pytest.mark.parametrize("bad", [1.0, -0.1])
+    def test_dropout_validation(self, bad):
+        with pytest.raises(ValueError, match="dropout_frac"):
+            run(LAYOUTS["T1"], fused=False, dropout_frac=bad)
