@@ -35,13 +35,29 @@ def row(name: str, us: float, **derived) -> str:
     return f"{name},{us:.1f},{kv}"
 
 
+def environment_stamp() -> dict:
+    """The reproducibility stamp every recorded payload carries: numbers
+    measured under one jax version / device class cannot be compared to
+    another's without knowing it."""
+    import jax
+
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": jax.devices()[0].device_kind,
+        "device_count": jax.device_count(),
+    }
+
+
 def record_result(json_path: str | Path, payload: dict) -> None:
     """Write one benchmark's JSON record under ``benchmarks/results/``.
 
-    The single JSON-writing path shared by ``bench_trainer`` and
-    ``bench_clustering`` (creates parent dirs, pretty-prints, trailing
-    newline), so recorded artifacts stay diff-friendly and uniform.
+    The single JSON-writing path shared by every recording benchmark
+    (creates parent dirs, pretty-prints, trailing newline, stamps the
+    jax/device environment), so recorded artifacts stay diff-friendly
+    and uniform.
     """
+    payload = {**payload, "env": environment_stamp()}
     p = Path(json_path)
     p.parent.mkdir(parents=True, exist_ok=True)
     p.write_text(json.dumps(payload, indent=2) + "\n")

@@ -80,6 +80,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import similarity as sim
 from repro.core.cluster_engine import ClusterConfig, ClusterEngine
 from repro.core.engine import make_user_mesh
+from repro.kernels import quant
 from repro.kernels.assign.ref import assign_ref
 
 __all__ = ["MembershipConfig", "MembershipEngine", "MembershipState",
@@ -130,8 +131,16 @@ class MembershipConfig:
       linkage: HAC linkage handed to the ``ClusterEngine`` on re-cluster.
       compute_dtype: pallas assign kernel precision — "bf16" matmul
         inputs with fp32 accumulation (default) or exact "fp32".
-      interpret: Pallas interpret-mode override (default: interpret off
-        TPU), consulted by the pallas backend only.
+      directory_dtype: storage dtype of the prototype table — "f32"
+        (exact), "bf16" (2x memory cut) or "int8" (4x, symmetric
+        per-prototype scales from ``kernels.quant``).  The pallas
+        backend dequantizes inside the assign kernel's epilogue; the
+        jnp/numpy paths dequantize before scoring.  Streaming
+        admit/evict updates dequant -> update -> requant, so the table
+        never needs a resident f32 copy.
+      interpret: Pallas interpret-mode override (default: lowered on
+        TPU/GPU, interpret on CPU via ``kernels.dispatch``), consulted
+        by the pallas backend only.
     """
 
     backend: str = "numpy"
@@ -147,6 +156,7 @@ class MembershipConfig:
     drift_stat: str = "max"
     linkage: str = "average"
     compute_dtype: str = "bf16"
+    directory_dtype: str = "f32"
     interpret: bool | None = None
 
     def __post_init__(self):
@@ -179,6 +189,10 @@ class MembershipConfig:
         if self.compute_dtype not in ("fp32", "bf16"):
             raise ValueError(f"compute_dtype must be 'fp32' or 'bf16', "
                              f"got {self.compute_dtype!r}")
+        if self.directory_dtype not in quant.DIRECTORY_DTYPES:
+            raise ValueError(f"directory_dtype must be one of "
+                             f"{quant.DIRECTORY_DTYPES}, "
+                             f"got {self.directory_dtype!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -190,21 +204,39 @@ class MembershipState:
     slot).  ``protos0``/``counts`` snapshot the prototypes at the last
     (re)cluster — the reference the drift statistic measures against.
     Arrays are jnp on the device backends, numpy on the reference.
+
+    ``protos``/``protos0`` live in ``MembershipConfig.directory_dtype``
+    (f32 exact, bf16 or int8 quantized); ``proto_scales`` /
+    ``proto0_scales`` carry the per-prototype symmetric int8 scales
+    (``None`` for f32/bf16).  ``directory_bytes`` is the resident
+    serving-directory footprint the quantized dtypes shrink.
     """
 
     lam: jax.Array | np.ndarray        # (cap, k) member spectra
     v: jax.Array | np.ndarray          # (cap, d, k) member eigenvectors
     labels: jax.Array | np.ndarray     # (cap,) i32, -1 = unassigned/empty
     valid: jax.Array | np.ndarray      # (cap,) bool
-    protos: jax.Array | np.ndarray     # (T, d, d) mean projectors
+    protos: jax.Array | np.ndarray     # (T, d, d) directory-dtype table
     counts: jax.Array | np.ndarray     # (T,) members per cluster
     protos0: jax.Array | np.ndarray    # (T, d, d) snapshot at last cluster
     n_clusters: int
     n_reclusters: int = 0
+    proto_scales: jax.Array | np.ndarray | None = None   # (T,) int8 scales
+    proto0_scales: jax.Array | np.ndarray | None = None
 
     @property
     def capacity(self) -> int:
         return int(self.lam.shape[0])
+
+    @property
+    def directory_bytes(self) -> int:
+        """Resident bytes of the serving directory (table + scales)."""
+        return quant.directory_nbytes(self.protos, self.proto_scales)
+
+    @property
+    def protos_f32(self) -> jax.Array | np.ndarray:
+        """The dequantized ``(T, d, d)`` prototype view (f32)."""
+        return quant.dequantize_directory(self.protos, self.proto_scales)
 
     @property
     def n_members(self) -> int:
@@ -324,20 +356,35 @@ def _verdict_from_affinity(aff, affinity_floor, margin_floor):
                          margin_floor), margin
 
 
-@partial(jax.jit,
-         static_argnames=("impl", "compute_dtype", "interpret"))
 def _assign_device(v_wave, protos, counts, affinity_floor, margin_floor,
-                   *, impl: str, compute_dtype: str,
+                   *, scales=None, impl: str, compute_dtype: str,
                    interpret: bool | None):
-    mask = counts > 0
+    # NOT jitted at this level: the pallas path resolves tile sizes
+    # through the tuning cache (a host-side lookup) before its own jit.
     if impl == "pallas":
         from repro.kernels.assign import ops as assign_ops
 
         aff, labels, margin = assign_ops.assign(
-            v_wave, protos, mask, compute_dtype=compute_dtype,
-            interpret=interpret)
-    else:
-        aff, labels, margin = assign_ref(v_wave, protos, mask)
+            v_wave, protos, counts > 0, compute_dtype=compute_dtype,
+            interpret=interpret, scales=scales)
+        return _finish_assign_device(labels, aff, margin, affinity_floor,
+                                     margin_floor)
+    return _assign_device_ref(v_wave, protos, counts, scales,
+                              affinity_floor, margin_floor)
+
+
+@jax.jit
+def _finish_assign_device(labels, aff, margin, affinity_floor, margin_floor):
+    labels = _apply_floors(labels, jnp.max(aff, axis=1), margin,
+                           affinity_floor, margin_floor)
+    return labels, aff, margin
+
+
+@jax.jit
+def _assign_device_ref(v_wave, protos, counts, scales, affinity_floor,
+                       margin_floor):
+    protos = quant.dequantize_directory(protos, scales)
+    aff, labels, margin = assign_ref(v_wave, protos, counts > 0)
     labels = _apply_floors(labels, jnp.max(aff, axis=1), margin,
                            affinity_floor, margin_floor)
     return labels, aff, margin
@@ -441,9 +488,11 @@ class MembershipEngine:
             lam_t, v_t = jnp.asarray(lam_t), jnp.asarray(v_t)
             lab_t, valid = jnp.asarray(lab_t), jnp.asarray(valid)
         protos, counts = self._rebuild_protos(v_t, lab_t, valid, n_clusters)
+        table, scales = self._quantize(protos)
         self.state = MembershipState(
-            lam=lam_t, v=v_t, labels=lab_t, valid=valid, protos=protos,
-            counts=counts, protos0=protos, n_clusters=n_clusters)
+            lam=lam_t, v=v_t, labels=lab_t, valid=valid, protos=table,
+            counts=counts, protos0=table, n_clusters=n_clusters,
+            proto_scales=scales, proto0_scales=scales)
         return self.state
 
     @property
@@ -455,6 +504,14 @@ class MembershipEngine:
             raise ValueError("directory is empty — seed() or "
                              "from_oneshot() first")
         return self.state
+
+    def _quantize(self, protos):
+        """f32 prototypes -> (directory-dtype table, scales | None)."""
+        return quant.quantize_directory(protos, self.cfg.directory_dtype)
+
+    @staticmethod
+    def _dequantize(st: MembershipState):
+        return quant.dequantize_directory(st.protos, st.proto_scales)
 
     def _rebuild_protos(self, v, labels, valid, n_clusters: int):
         agg = self.cfg.aggregator
@@ -520,13 +577,15 @@ class MembershipEngine:
             labels, aff, margin = _assign_device(
                 jnp.asarray(v, jnp.float32), st.protos, st.counts,
                 self.cfg.affinity_floor, self.cfg.margin_floor,
+                scales=st.proto_scales,
                 impl=("pallas" if self.cfg.backend == "pallas" else "jnp"),
                 compute_dtype=self.cfg.compute_dtype,
                 interpret=self.cfg.interpret)
             return AssignResult(labels=labels, affinity=aff, margin=margin)
         v = np.asarray(v, np.float32)
         k = v.shape[-1]
-        aff = np.einsum("bdk,tde,bek->bt", v, st.protos, v) / k
+        protos = self._dequantize(st)
+        aff = np.einsum("bdk,tde,bek->bt", v, protos, v) / k
         aff = np.where(st.counts > 0, aff, -np.inf)
         labels = aff.argmax(axis=1).astype(np.int32)
         best = aff.max(axis=1)
@@ -575,7 +634,11 @@ class MembershipEngine:
         with mesh:
             v_w = jax.device_put(jnp.asarray(v, jnp.float32),
                                  NamedSharding(mesh, P()))
-            protos = jax.device_put(st.protos, NamedSharding(mesh, P(axis)))
+            # dequantize before sharding: the per-shard einsum path has no
+            # in-kernel dequant epilogue, and scales would need their own
+            # matching shard layout
+            protos = jax.device_put(jnp.asarray(self._dequantize(st)),
+                                    NamedSharding(mesh, P(axis)))
             counts = jax.device_put(st.counts, NamedSharding(mesh, P(axis)))
             labels, aff, margin = jax.jit(fn)(v_w, protos, counts)
         return AssignResult(labels=labels, affinity=aff, margin=margin)
@@ -612,14 +675,16 @@ class MembershipEngine:
             valid = st.valid.at[sl].set(True)
             if streaming:
                 delta, m = _wave_outer_sums(v_w, lab_w, st.counts)
-                protos, counts = _proto_update(st.protos, st.counts,
-                                               delta, m, sign=1.0)
+                protos, counts = _proto_update(self._dequantize(st),
+                                               st.counts, delta, m,
+                                               sign=1.0)
             else:
                 protos, counts = self._rebuild_protos(v_t, lab_t, valid,
                                                       st.n_clusters)
+            table, scales = self._quantize(protos)
             self.state = dataclasses.replace(
                 st, lam=lam_t, v=v_t, labels=lab_t, valid=valid,
-                protos=protos, counts=counts)
+                protos=table, counts=counts, proto_scales=scales)
             return slots
         v = np.asarray(v, np.float32)
         lam_t, v_t = st.lam.copy(), st.v.copy()
@@ -631,9 +696,10 @@ class MembershipEngine:
         else:
             protos, counts = self._rebuild_protos(v_t, lab_t, valid,
                                                   st.n_clusters)
+        table, scales = self._quantize(protos)
         self.state = dataclasses.replace(
             st, lam=lam_t, v=v_t, labels=lab_t, valid=valid,
-            protos=protos, counts=counts)
+            protos=table, counts=counts, proto_scales=scales)
         return slots
 
     def evict(self, slots) -> None:
@@ -659,14 +725,16 @@ class MembershipEngine:
                 delta, m = _wave_outer_sums(st.v[sl],
                                             jnp.asarray(labels_out),
                                             st.counts)
-                protos, counts = _proto_update(st.protos, st.counts,
-                                               delta, m, sign=-1.0)
+                protos, counts = _proto_update(self._dequantize(st),
+                                               st.counts, delta, m,
+                                               sign=-1.0)
             else:
                 protos, counts = self._rebuild_protos(st.v, lab_t, valid,
                                                       st.n_clusters)
+            table, scales = self._quantize(protos)
             self.state = dataclasses.replace(
                 st, labels=lab_t, valid=valid,
-                protos=protos, counts=counts)
+                protos=table, counts=counts, proto_scales=scales)
             return
         lab_t, valid = st.labels.copy(), st.valid.copy()
         lab_t[slots], valid[slots] = UNASSIGNED, False
@@ -676,8 +744,10 @@ class MembershipEngine:
         else:
             protos, counts = self._rebuild_protos(st.v, lab_t, valid,
                                                   st.n_clusters)
+        table, scales = self._quantize(protos)
         self.state = dataclasses.replace(st, labels=lab_t, valid=valid,
-                                         protos=protos, counts=counts)
+                                         protos=table, counts=counts,
+                                         proto_scales=scales)
 
     def _np_proto_shift(self, st: MembershipState, v: np.ndarray,
                         labels: np.ndarray, sign: float):
@@ -687,7 +757,7 @@ class MembershipEngine:
         delta = np.einsum("bt,bde->tde", onehot, outer)
         m = onehot.sum(axis=0)
         counts = np.maximum(st.counts + sign * m, 0.0)
-        num = st.protos * st.counts[:, None, None] + sign * delta
+        num = self._dequantize(st) * st.counts[:, None, None] + sign * delta
         protos = np.where((counts > 0)[:, None, None],
                           num / np.maximum(counts, 1.0)[:, None, None],
                           0.0).astype(np.float32)
@@ -703,7 +773,10 @@ class MembershipEngine:
         cannot trip re-cluster thrash on its own)."""
         st = self._require_state()
         n = max(st.n_members, 1)
-        p, p0 = np.asarray(st.protos), np.asarray(st.protos0)
+        p = np.asarray(quant.dequantize_directory(st.protos,
+                                                  st.proto_scales))
+        p0 = np.asarray(quant.dequantize_directory(st.protos0,
+                                                   st.proto0_scales))
         shift = np.linalg.norm((p - p0).reshape(st.n_clusters, -1), axis=1)
         base = np.maximum(
             np.linalg.norm(p0.reshape(st.n_clusters, -1), axis=1), 1e-6)
@@ -751,9 +824,11 @@ class MembershipEngine:
         labels = jnp.asarray(lab_t) if self.on_device else lab_t
         protos, counts = self._rebuild_protos(st.v, labels, st.valid,
                                               st.n_clusters)
+        table, scales = self._quantize(protos)
         self.state = dataclasses.replace(
-            st, labels=labels, protos=protos, counts=counts,
-            protos0=protos, n_reclusters=st.n_reclusters + 1)
+            st, labels=labels, protos=table, counts=counts,
+            protos0=table, n_reclusters=st.n_reclusters + 1,
+            proto_scales=scales, proto0_scales=scales)
         return True
 
     def maybe_recluster(self) -> bool:

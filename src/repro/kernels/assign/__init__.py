@@ -1,2 +1,2 @@
-from repro.kernels.assign.ops import assign
+from repro.kernels.assign.ops import assign, assign_looped
 from repro.kernels.assign.ref import assign_ref

@@ -1,18 +1,29 @@
-"""Fused project + trace + argmax Pallas kernel for cluster assignment.
+"""Fused wave-batched project + trace + argmax Pallas kernels for cluster
+assignment, with in-tile directory dequantization.
 
-One newcomer's assignment visits every cluster prototype once:
+The affinity is a Frobenius inner product: ``tr(V_b^T P_t V_b) =
+<V_b V_b^T, P_t>``.  Flattening the wave's signature projectors
+``S (B, d^2)`` and the directory ``P (T, d^2)`` turns the whole wave's
+scoring into ONE matmul ``A = S P^T`` — MXU-shaped on TPU, and a few
+grid steps (instead of ``B x T``) in interpret mode.
 
-grid = (T,): each step loads the newcomer's eigenvector block ``V (d, k)``
-(resident across steps) and one prototype ``P_t (d, d)``, computes the
-projection ``P_t V`` on the MXU (bf16 inputs / fp32 accumulation via
-``preferred_element_type`` when ``compute_dtype="bf16"``), contracts it
-against ``V`` on the VPU into the trace ``sum((P_t V) * V)``, and folds
-the scalar into a running (best, second-best, argmax) kept in SMEM.  The
-final step flushes the label and the confidence margin — the ``(T,)``
-affinity row never round-trips through HBM for its reduction.
+``assign_wave_pallas`` tiles that matmul over ``(B/bb, d^2/bd2)`` with
+the directory axis resident (``T`` is small), and fuses the verdict
+epilogue into the final reduction tile: per-prototype dequant scale,
+liveness mask, the affinity row write, and the running
+(best, second-best, argmax) — labels and confidence margins leave the
+kernel ready-made, the ``(B, T)`` affinity never round-trips through HBM
+for its reduction.  The directory rides in as f32, bf16, or int8 with
+symmetric per-prototype scales (``kernels/quant``): the dequant is a
+single epilogue multiply because the scale commutes with the
+contraction, so a million-entry int8 directory is scored without ever
+materializing its f32 form.
 
-Tie-breaking matches ``jnp.argmax`` (first index wins): only a strictly
-greater affinity displaces the running best.
+``assign_one_pallas`` is the PR-5 per-arrival kernel (grid over
+prototypes, SMEM running best) — kept as the benchmark baseline and for
+single-arrival serving where building ``S`` is not worth it.
+
+Tie-breaking matches ``jnp.argmax`` (first index wins) in both kernels.
 """
 from __future__ import annotations
 
@@ -25,6 +36,109 @@ from jax.experimental.pallas import tpu as pltpu
 
 COMPUTE_DTYPES = ("fp32", "bf16")
 
+
+# ---------------------------------------------------------------------------
+# Wave-batched kernel: one matmul for the whole wave, fused verdict epilogue
+# ---------------------------------------------------------------------------
+
+def _wave_kernel(s_ref, p_ref, sc_ref, m_ref, aff_ref, lab_ref, mar_ref,
+                 acc_ref, *, n_d2: int, n_clusters: int, compute_dtype: str):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    s = s_ref[...]                                       # (bb, bd2) f32
+    p = p_ref[...]                                       # (tp, bd2) f32/bf16/i8
+    if compute_dtype == "bf16":
+        s, p = s.astype(jnp.bfloat16), p.astype(jnp.bfloat16)
+    else:
+        s, p = s.astype(jnp.float32), p.astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        s, p, (((1,), (1,)), ((), ())),                  # contract d^2
+        preferred_element_type=jnp.float32)              # (bb, tp) f32 acc
+
+    @pl.when(c == n_d2 - 1)
+    def _epilogue():
+        a = acc_ref[...] * sc_ref[...]                   # per-proto dequant
+        a = jnp.where(m_ref[...] > 0.5, a, -jnp.inf)     # dead/padded protos
+        aff_ref[...] = a
+        best = jnp.max(a, axis=1, keepdims=True)
+        cols = jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+        lab = jnp.min(jnp.where(a == best, cols, a.shape[1]), axis=1,
+                      keepdims=True)                     # first index wins
+        if n_clusters == 1:
+            # one-cluster directory: no runner-up, margin degenerates to
+            # the affinity itself (matching assign_ref)
+            mar = best
+        else:
+            mar = best - jnp.max(jnp.where(cols == lab, -jnp.inf, a),
+                                 axis=1, keepdims=True)
+        lab_ref[...] = jnp.broadcast_to(lab, lab_ref.shape)
+        mar_ref[...] = jnp.broadcast_to(mar, mar_ref.shape)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_clusters", "block_b", "block_d2",
+                                    "compute_dtype", "interpret"))
+def assign_wave_pallas(s: jax.Array, protos_flat: jax.Array,
+                       scales: jax.Array, mask: jax.Array,
+                       n_clusters: int, block_b: int = 128,
+                       block_d2: int = 512, compute_dtype: str = "bf16",
+                       interpret: bool = False
+                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """``s (B, D2)`` f32 wave projectors, ``protos_flat (Tp, D2)`` in the
+    directory dtype, ``scales (1, Tp)`` f32, ``mask (1, Tp)`` f32 ->
+    ``(affinity (B, Tp) f32 RAW, labels (B,) i32, margin (B,) f32 RAW)``.
+
+    ``B``/``D2`` must be block multiples and ``Tp`` a lane multiple
+    (``ops.py`` pads; zero rows/cols and zero-masked prototypes are
+    exact).  ``n_clusters`` is the count of REAL directory entries — it
+    only gates the one-cluster margin degeneracy.  The ``/k``
+    normalisation is cheap postprocessing in ``ops.py``.
+    """
+    if compute_dtype not in COMPUTE_DTYPES:
+        raise ValueError(f"compute_dtype must be one of {COMPUTE_DTYPES}, "
+                         f"got {compute_dtype!r}")
+    b, d2 = s.shape
+    tp = protos_flat.shape[0]
+    if protos_flat.shape[1] != d2:
+        raise ValueError(f"bad shapes s={s.shape} "
+                         f"protos_flat={protos_flat.shape}")
+    if b % block_b or d2 % block_d2:
+        raise ValueError(f"(B, D2)={(b, d2)} not divisible by blocks "
+                         f"({block_b}, {block_d2})")
+    if tp % 128:
+        raise ValueError(f"padded directory axis {tp} must be a lane "
+                         f"multiple of 128")
+    grid = (b // block_b, d2 // block_d2)
+    row_spec = pl.BlockSpec((1, tp), lambda i, c: (0, 0))
+    aff, lab, mar = pl.pallas_call(
+        functools.partial(_wave_kernel, n_d2=grid[1], n_clusters=n_clusters,
+                          compute_dtype=compute_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_d2), lambda i, c: (i, c)),
+            pl.BlockSpec((tp, block_d2), lambda i, c: (0, c)),
+            row_spec,
+            row_spec,
+        ],
+        out_specs=(pl.BlockSpec((block_b, tp), lambda i, c: (i, 0)),
+                   pl.BlockSpec((block_b, 128), lambda i, c: (i, 0)),
+                   pl.BlockSpec((block_b, 128), lambda i, c: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((b, tp), jnp.float32),
+                   jax.ShapeDtypeStruct((b, 128), jnp.int32),
+                   jax.ShapeDtypeStruct((b, 128), jnp.float32)),
+        scratch_shapes=[pltpu.VMEM((block_b, tp), jnp.float32)],
+        interpret=interpret,
+    )(s, protos_flat, scales, mask)
+    return aff, lab[:, 0], mar[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Per-arrival kernel (PR-5): grid over prototypes, SMEM running best
+# ---------------------------------------------------------------------------
 
 def _kernel(v_ref, p_ref, m_ref, aff_ref, lab_ref, mar_ref,
             bval_ref, bsec_ref, bidx_ref, *, n_steps: int,
@@ -77,7 +191,7 @@ def _kernel(v_ref, p_ref, m_ref, aff_ref, lab_ref, mar_ref,
                                     "interpret"))
 def assign_one_pallas(v: jax.Array, protos_flat: jax.Array,
                       mask: jax.Array, n_clusters: int,
-                      compute_dtype: str = "bf16", interpret: bool = True
+                      compute_dtype: str = "bf16", interpret: bool = False
                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """``v (d, k)``, ``protos_flat (T*d, d)``, ``mask (T,)`` ->
     ``(affinity (T,) f32 RAW trace, label i32, margin f32 RAW)``.

@@ -1,4 +1,20 @@
-"""Public wrapper for the fused assignment kernel: pad + batch + normalize."""
+"""Public wrapper for the fused assignment kernel: pad + batch + normalize.
+
+The default path (``assign``) scores the whole wave with ONE tiled matmul
+(``assign_wave_pallas``): the wave's signature projectors are flattened to
+``S (B, d^2)`` and contracted against the flattened directory, with the
+argmax/margin verdict fused into the kernel's last reduction tile.  Tile
+sizes come from ``kernels.tuning`` (autotuned cache or per-backend
+heuristics) unless pinned by the caller; long waves are chunked so the
+flattened ``S`` never exceeds a bounded footprint.  The directory may be
+pre-quantized (``kernels.quant``): pass the int8/bf16 table as ``protos``
+and the per-prototype ``scales`` — dequantization happens inside the
+kernel's epilogue.
+
+``assign_looped`` is the previous generation (``lax.map`` of a
+per-arrival kernel, one grid launch per arrival) kept as the benchmark
+baseline.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -6,34 +22,104 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.assign.assign import assign_one_pallas
+from repro.kernels import dispatch, tuning
+from repro.kernels.assign.assign import assign_one_pallas, assign_wave_pallas
 from repro.kernels.assign.ref import assign_ref  # noqa: F401
 
+_LANE = 128
+# Cap on flattened-S elements per kernel dispatch (~64 MiB f32); longer
+# waves are split into equal chunks and mapped.
+_MAX_S_ELEMS = 1 << 24
 
-def _is_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
-
-@partial(jax.jit, static_argnames=("compute_dtype", "interpret"))
 def assign(v: jax.Array, protos: jax.Array, mask: jax.Array | None = None,
-           compute_dtype: str = "bf16", interpret: bool | None = None
+           compute_dtype: str = "bf16", interpret: bool | None = None, *,
+           scales: jax.Array | None = None, block_b: int | None = None,
+           block_d2: int | None = None
            ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Batched fused assignment: ``v (B, d, k)``, ``protos (T, d, d)`` ->
     ``(affinity (B, T), labels (B,) i32, margin (B,))`` — same contract
     (and ``/k`` normalisation) as ``assign_ref``.
 
-    ``d``/``k`` are zero-padded to lane multiples of 128 (padded rows and
-    columns contribute exactly zero to every trace); the wave rides
-    through ``lax.map``, so the whole wave is ONE dispatch.  ``mask (T,)``
-    marks live clusters (dead ones can never win the argmax).
+    ``protos`` may be f32, bf16, or int8; int8 requires the matching
+    per-prototype ``scales (T,)`` from ``quant.quantize_directory`` (the
+    dequant multiply rides in the kernel epilogue and is exact given the
+    quantized table).  ``mask (T,)`` marks live clusters (dead ones can
+    never win the argmax).  ``block_b``/``block_d2`` pin tile sizes;
+    left unset they resolve through the autotune cache / heuristics.
     """
-    interpret = (not _is_tpu()) if interpret is None else interpret
+    interpret = dispatch.resolve_interpret(interpret)
+    b, d, _ = v.shape
+    if block_b is None or block_d2 is None:
+        blocks = tuning.get_blocks("assign", b=b, d2=d * d)
+        block_b = block_b or blocks["block_b"]
+        block_d2 = block_d2 or blocks["block_d2"]
+    return _assign_impl(v, protos, scales, mask, compute_dtype=compute_dtype,
+                        interpret=interpret, block_b=block_b,
+                        block_d2=block_d2)
+
+
+@partial(jax.jit, static_argnames=("compute_dtype", "interpret", "block_b",
+                                   "block_d2"))
+def _assign_impl(v, protos, scales, mask, *, compute_dtype: str,
+                 interpret: bool, block_b: int, block_d2: int):
+    b, d, k = v.shape
+    t = protos.shape[0]
+    d2 = d * d
+    m = (jnp.ones((t,), jnp.float32) if mask is None
+         else mask.astype(jnp.float32))
+    sc = (jnp.ones((t,), jnp.float32) if scales is None
+          else scales.astype(jnp.float32))
+
+    # Pad the directory axis to a lane multiple and the flattened-feature
+    # axis to a block multiple; zeros are exact (padded prototypes are
+    # also mask-dead, padded features contribute zero to every trace).
+    tp = t + (-t % _LANE)
+    d2p = d2 + (-d2 % block_d2)
+    p_flat = jnp.pad(protos.reshape(t, d2), ((0, tp - t), (0, d2p - d2)))
+    sc_row = jnp.pad(sc, (0, tp - t), constant_values=1.0)[None, :]
+    m_row = jnp.pad(m, (0, tp - t))[None, :]
+
+    def score(v_c):
+        s = jnp.einsum("bdk,bek->bde", v_c, v_c).reshape(v_c.shape[0], d2)
+        s = jnp.pad(s, ((0, 0), (0, d2p - d2)))
+        return assign_wave_pallas(s, p_flat, sc_row, m_row, n_clusters=t,
+                                  block_b=block_b, block_d2=block_d2,
+                                  compute_dtype=compute_dtype,
+                                  interpret=interpret)
+
+    chunk = max(block_b, _MAX_S_ELEMS // d2p // block_b * block_b)
+    v = v.astype(jnp.float32)
+    if b <= chunk:
+        bp = b + (-b % block_b)
+        aff, lab, mar = score(jnp.pad(v, ((0, bp - b), (0, 0), (0, 0))))
+    else:
+        bp = b + (-b % chunk)
+        aff, lab, mar = jax.lax.map(
+            score, jnp.pad(v, ((0, bp - b), (0, 0), (0, 0))
+                           ).reshape(bp // chunk, chunk, d, k))
+        aff = aff.reshape(bp, tp)
+        lab = lab.reshape(bp)
+        mar = mar.reshape(bp)
+    return aff[:b, :t] / k, lab[:b], mar[:b] / k
+
+
+@partial(jax.jit, static_argnames=("compute_dtype", "interpret"))
+def assign_looped(v: jax.Array, protos: jax.Array,
+                  mask: jax.Array | None = None, compute_dtype: str = "bf16",
+                  interpret: bool | None = None
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Previous-generation assignment (one kernel launch per arrival via
+    ``lax.map``) — kept as the benchmark baseline for the wave kernel.
+    Same contract as ``assign``."""
+    if interpret is None:  # inside jit: resolve statically, no tracer leak
+        interpret = dispatch.resolve_interpret(None)
     b, d, k = v.shape
     t = protos.shape[0]
     m = (jnp.ones((t,), jnp.float32) if mask is None
          else mask.astype(jnp.float32))
-    pad_d = (-d) % 128
-    pad_k = (-k) % 128
+    pad_d = (-d) % _LANE
+    pad_k = (-k) % _LANE
     v = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, pad_d), (0, pad_k)))
     protos_flat = jnp.pad(protos.astype(jnp.float32),
                           ((0, 0), (0, pad_d), (0, pad_d))

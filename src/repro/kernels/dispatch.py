@@ -1,0 +1,57 @@
+"""Shared Pallas execution dispatch: one place that decides lowered vs
+interpret execution for every kernel family.
+
+Every ``kernels/*/ops.py`` wrapper used to carry its own copy-pasted
+``_is_tpu()`` helper and defaulted to interpret mode everywhere but TPU.
+That left GPU hosts interpreting (Pallas has a Triton lowering there) and
+scattered the policy across six files.  This module is now the single
+source of truth:
+
+  ``interpret=None``  ->  lowered on TPU (Mosaic) and GPU (Triton),
+                          interpret-mode fallback on CPU (no Pallas
+                          lowering exists there — this is what keeps CI
+                          green off-accelerator).
+  ``interpret=bool``  ->  explicit override, passed through untouched.
+
+``device_kind()`` feeds the autotuner's cache key (``kernels/tuning.py``)
+and the roofline hardware table (``launch/roofline.py``): tuned block
+sizes measured on one device class must never be replayed on another.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["LOWERED_BACKENDS", "backend_kind", "supports_lowering",
+           "resolve_interpret", "device_kind"]
+
+#: Platforms with a real Pallas lowering: TPU via Mosaic, GPU via Triton.
+LOWERED_BACKENDS = ("tpu", "gpu")
+
+
+def backend_kind() -> str:
+    """The JAX default backend platform: ``"tpu" | "gpu" | "cpu"``."""
+    return jax.default_backend()
+
+
+def supports_lowering() -> bool:
+    """True when Pallas can compile (not interpret) on this host."""
+    return backend_kind() in LOWERED_BACKENDS
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """The one interpret-mode policy: auto-detect unless overridden.
+
+    ``None`` resolves to lowered execution on TPU/GPU and interpret mode
+    on CPU; an explicit bool wins unconditionally (CI parity tests pin
+    ``interpret=True`` so kernel bodies execute everywhere).
+    """
+    return (not supports_lowering()) if interpret is None else bool(interpret)
+
+
+def device_kind() -> str:
+    """Hardware model string of device 0 (e.g. ``"TPU v5e"``, ``"cpu"``).
+
+    Cache keys and the roofline hardware table key on this, not on the
+    coarse platform name — a v4 and a v5e want different tiles.
+    """
+    return jax.devices()[0].device_kind

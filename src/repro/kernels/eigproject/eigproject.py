@@ -51,7 +51,7 @@ def _kernel(g_ref, v_ref, o_ref, prod_acc, sq_acc, *, n_row: int,
 @functools.partial(jax.jit, static_argnames=("block_d", "block_k",
                                              "interpret"))
 def project_norms_pallas(g: jax.Array, v: jax.Array, block_d: int = 128,
-                         block_k: int = 128, interpret: bool = True
+                         block_k: int = 128, interpret: bool = False
                          ) -> jax.Array:
     """``g (d, d)``, ``v (d, k)`` -> ``||g @ v||_2`` per column, ``(k,)``."""
     d, d2 = g.shape

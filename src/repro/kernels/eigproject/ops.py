@@ -4,22 +4,25 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch, tuning
 from repro.kernels.eigproject.eigproject import project_norms_pallas
 from repro.kernels.eigproject.ref import project_norms_ref
 
 
-def _is_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def project_norms(g: jax.Array, v: jax.Array, block_d: int = 128,
-                  block_k: int = 128, interpret: bool | None = None
+def project_norms(g: jax.Array, v: jax.Array, block_d: int | None = None,
+                  block_k: int | None = None, interpret: bool | None = None
                   ) -> jax.Array:
     """``lamhat = ||G v_k||`` per column.  Pads to block multiples; the
-    padded G rows/cols are zero so norms over the valid columns are exact."""
+    padded G rows/cols are zero so norms over the valid columns are exact.
+
+    Unpinned block sizes resolve through ``kernels.tuning``."""
     d = g.shape[0]
     k = v.shape[1]
-    interpret = (not _is_tpu()) if interpret is None else interpret
+    interpret = dispatch.resolve_interpret(interpret)
+    if block_d is None or block_k is None:
+        blocks = tuning.get_blocks("eigproject", d=d, k=k)
+        block_d = block_d or blocks["block_d"]
+        block_k = block_k or blocks["block_k"]
     pad_d = (-d) % block_d
     pad_k = (-k) % block_k
     if pad_d:

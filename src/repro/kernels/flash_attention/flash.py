@@ -72,7 +72,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                                              "block_kv", "interpret"))
 def flash_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                  causal: bool = True, window: int = 0, block_q: int = 128,
-                 block_kv: int = 128, interpret: bool = True) -> jax.Array:
+                 block_kv: int = 128, interpret: bool = False) -> jax.Array:
     """``q (BH, S, hd)``, ``k/v (BH, Skv, hd)`` -> ``(BH, S, hd)``."""
     bh, s, hd = q.shape
     skv = k.shape[1]

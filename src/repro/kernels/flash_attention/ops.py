@@ -4,12 +4,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels.flash_attention.flash import flash_pallas
 from repro.kernels.flash_attention.ref import flash_ref
-
-
-def _is_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -23,7 +20,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     """
     b, s, h, hd = q.shape
     skv = k.shape[1]
-    interpret = (not _is_tpu()) if interpret is None else interpret
+    interpret = dispatch.resolve_interpret(interpret)
 
     def flat(t):
         return t.transpose(0, 2, 1, 3).reshape(b * h, t.shape[1], hd)

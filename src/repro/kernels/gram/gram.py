@@ -38,7 +38,7 @@ def _kernel(x_i_ref, x_j_ref, o_ref, acc_ref, *, n_steps: int):
 @functools.partial(jax.jit,
                    static_argnames=("block_d", "block_n", "interpret"))
 def gram_pallas(x: jax.Array, block_d: int = 128, block_n: int = 128,
-                interpret: bool = True) -> jax.Array:
+                interpret: bool = False) -> jax.Array:
     """``x (n, d)`` -> ``x.T @ x (d, d)`` in fp32."""
     n, d = x.shape
     if n % block_n or d % block_d:

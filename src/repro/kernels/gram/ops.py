@@ -4,20 +4,25 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch, tuning
 from repro.kernels.gram.gram import gram_pallas
 from repro.kernels.gram.ref import gram_ref
 
 
-def _is_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def gram_matrix(x: jax.Array, block_d: int = 128, block_n: int = 128,
+def gram_matrix(x: jax.Array, block_d: int | None = None,
+                block_n: int | None = None,
                 interpret: bool | None = None) -> jax.Array:
     """``x (n, d)`` -> ``x^T x (d, d)`` fp32.  Zero-pads to block multiples
-    (zero rows/cols do not change X^T X on the valid region)."""
+    (zero rows/cols do not change X^T X on the valid region).
+
+    Unpinned block sizes resolve through ``kernels.tuning`` (autotune
+    cache, else per-backend heuristics)."""
     n, d = x.shape
-    interpret = (not _is_tpu()) if interpret is None else interpret
+    interpret = dispatch.resolve_interpret(interpret)
+    if block_d is None or block_n is None:
+        blocks = tuning.get_blocks("gram", n=n, d=d)
+        block_n = block_n or blocks["block_n"]
+        block_d = block_d or blocks["block_d"]
     pad_n = (-n) % block_n
     pad_d = (-d) % block_d
     if pad_n or pad_d:

@@ -4,27 +4,34 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch, tuning
 from repro.kernels.gram_project.gram_project import gram_project_pallas
 from repro.kernels.gram_project.ref import gram_project_ref
 
 
-def _is_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def gram_project(x: jax.Array, v: jax.Array,
                  n_valid: jax.Array | int | None = None,
-                 block_n: int = 128, block_k: int = 128,
+                 block_n: int | None = None, block_k: int | None = None,
+                 double_buffer: bool | None = None,
                  interpret: bool | None = None) -> jax.Array:
     """``lamhat_k = || (x^T x / n) v_k ||`` fused, ``x (n, d)``, ``v (d, k)``.
 
     Zero rows/cols pad ``x`` and zero rows pad ``v`` to block multiples —
     both leave the valid-column norms exact.  ``n_valid`` supports ragged
     per-user counts under a padded batch (rows >= n_valid must be zero).
+    Unpinned ``block_n``/``block_k``/``double_buffer`` resolve through
+    ``kernels.tuning`` (DMA double-buffering defaults on for lowered
+    backends, off in interpret mode where there is nothing to overlap).
     """
     n, d = x.shape
     k = v.shape[1]
-    interpret = (not _is_tpu()) if interpret is None else interpret
+    interpret = dispatch.resolve_interpret(interpret)
+    if block_n is None or block_k is None or double_buffer is None:
+        blocks = tuning.get_blocks("gram_project", n=n, k=k)
+        block_n = block_n or blocks["block_n"]
+        block_k = block_k or blocks["block_k"]
+        if double_buffer is None:
+            double_buffer = blocks["double_buffer"]
     pad_n = (-n) % block_n
     pad_d = (-d) % 128
     pad_k = (-k) % block_k
@@ -33,6 +40,7 @@ def gram_project(x: jax.Array, v: jax.Array,
     if pad_d or pad_k:
         v = jnp.pad(v, ((0, pad_d), (0, pad_k)))
     raw = gram_project_pallas(x, v, block_n=block_n, block_k=block_k,
+                              double_buffer=double_buffer,
                               interpret=interpret)[:k]
     nv = n if n_valid is None else n_valid
     return raw / jnp.maximum(jnp.asarray(nv, jnp.float32), 1.0)

@@ -68,7 +68,7 @@ def _kernel(na_ref, nb_ref, a_ref, b_ref, m_ref, row_ref, val_ref, idx_ref,
 def linkage_step_pallas(row_a: jax.Array, row_b: jax.Array,
                         size_a: jax.Array, size_b: jax.Array,
                         mask: jax.Array, linkage: str = "average",
-                        block: int = 512, interpret: bool = True
+                        block: int = 512, interpret: bool = False
                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """``row_a/row_b/mask (n,)`` -> ``(new_row (n,), argmax, max)``.
 

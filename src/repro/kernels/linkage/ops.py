@@ -4,37 +4,31 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch, tuning
 from repro.kernels.linkage.linkage import linkage_step_pallas
 from repro.kernels.linkage.ref import linkage_step_ref  # noqa: F401
-
-
-def _is_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _pick_block(n: int) -> int:
-    for b in (1024, 512, 256, 128):
-        if n % b == 0:
-            return b
-    raise ValueError(f"row length {n} is not a lane multiple of 128")
 
 
 def linkage_step(row_a: jax.Array, row_b: jax.Array,
                  size_a: jax.Array, size_b: jax.Array,
                  mask: jax.Array, linkage: str = "average",
-                 interpret: bool | None = None
+                 block: int | None = None, interpret: bool | None = None
                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Fused Lance-Williams update + masked argmax of one linkage row.
 
     ``row_a``/``row_b`` ``(n,)`` f32 with ``n`` a multiple of 128 (the
     ``ClusterEngine`` pads its matrix once up front), ``mask (n,)`` bool
     or float.  Returns ``(new_row (n,), argmax i32, max f32)`` — the same
-    contract as ``linkage_step_ref``.
+    contract as ``linkage_step_ref``.  An unpinned ``block`` resolves
+    through ``kernels.tuning`` (largest dividing lane multiple under the
+    backend cap — the rows cannot re-pad per call).
     """
-    interpret = (not _is_tpu()) if interpret is None else interpret
+    interpret = dispatch.resolve_interpret(interpret)
     n = row_a.shape[-1]
+    if block is None:
+        block = tuning.get_blocks("linkage", n=n)["block"]
     new_row, idx, val = linkage_step_pallas(
         row_a.astype(jnp.float32), row_b.astype(jnp.float32),
         size_a, size_b, mask.astype(jnp.float32), linkage=linkage,
-        block=_pick_block(n), interpret=interpret)
+        block=block, interpret=interpret)
     return new_row, idx, val

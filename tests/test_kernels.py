@@ -1,10 +1,13 @@
 """Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
 (interpret=True executes the kernel bodies on CPU)."""
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels import dispatch, quant, tuning
 from repro.kernels.assign import ops as assign_ops
 from repro.kernels.assign.ref import assign_ref
 from repro.kernels.eigproject import ops as proj_ops
@@ -17,6 +20,8 @@ from repro.kernels.gram import ops as gram_ops
 from repro.kernels.gram.ref import gram_ref
 from repro.kernels.gram_project import ops as gp_ops
 from repro.kernels.gram_project.ref import gram_project_ref
+from repro.kernels.linkage import ops as link_ops
+from repro.kernels.linkage.ref import linkage_step_ref
 
 
 class TestGramKernel:
@@ -291,3 +296,321 @@ class TestFlashAttentionKernel:
         q, k, v = (jax.random.normal(kk, (1, 100, 2, 64)) for kk in ks)
         out = fa_ops.flash_attention(q, k, v, interpret=True)
         assert out.shape == (1, 100, 2, 64)
+
+
+class TestTilingEdgeCases:
+    """Explicit tile-plan stress: blocks that don't divide the dims,
+    blocks larger than the whole dimension, single-row inputs, and the
+    bf16 drift bound — the shapes an autotuned plan must survive."""
+
+    def test_gram_block_larger_than_dims(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((130, 40)), jnp.float32)
+        out = gram_ops.gram_matrix(x, block_n=512, block_d=256,
+                                   interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(gram_ref(x)),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_gram_single_row(self):
+        x = jnp.asarray(np.arange(96, dtype=np.float32)[None, :] / 96)
+        out = gram_ops.gram_matrix(x, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(gram_ref(x)),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_gram_non_divisible_blocks(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.standard_normal((200, 200)), jnp.float32)
+        out = gram_ops.gram_matrix(x, block_n=128, block_d=128,
+                                   interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(gram_ref(x)),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_eigproject_block_larger_than_dims(self):
+        rng = np.random.default_rng(2)
+        g = rng.standard_normal((96, 96)).astype(np.float32)
+        g = jnp.asarray((g + g.T) / 2)
+        v = jnp.asarray(rng.standard_normal((96, 5)), jnp.float32)
+        out = proj_ops.project_norms(g, v, block_d=2048, block_k=2048,
+                                     interpret=True)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(project_norms_ref(g, v)),
+                                   rtol=1e-3, atol=1e-4)
+
+    def test_gram_project_single_row(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.standard_normal((1, 64)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((64, 4)), jnp.float32)
+        out = gp_ops.gram_project(x, v, block_n=256, block_k=512,
+                                  interpret=True)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(gram_project_ref(x, v)),
+                                   rtol=1e-3, atol=1e-4)
+
+    def test_featurize_gram_block_larger_than_rows(self):
+        rng = np.random.default_rng(4)
+        x = jnp.asarray(rng.standard_normal((100, 48)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((48, 24)), jnp.float32)
+        out = fg_ops.featurize_gram(x, w, block_n=1024, interpret=True)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(featurize_gram_ref(x, w)),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_linkage_explicit_blocks(self):
+        rng = np.random.default_rng(5)
+        n = 384
+        ra = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        rb = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        mask = jnp.asarray((rng.random(n) > 0.3).astype(np.float32))
+        ref_row, ref_idx, ref_val = linkage_step_ref(ra, rb, 2.0, 5.0, mask)
+        for block in (128, 384):
+            row, idx, val = link_ops.linkage_step(ra, rb, 2.0, 5.0, mask,
+                                                  block=block,
+                                                  interpret=True)
+            np.testing.assert_allclose(np.asarray(row), np.asarray(ref_row),
+                                       rtol=1e-5, atol=1e-5)
+            assert int(idx) == int(ref_idx)
+            np.testing.assert_allclose(float(val), float(ref_val),
+                                       rtol=1e-5)
+
+    def test_assign_single_arrival_odd_dims(self):
+        rng = np.random.default_rng(6)
+        v = jnp.asarray(rng.standard_normal((1, 24, 3)), jnp.float32)
+        p = jnp.asarray(rng.standard_normal((3, 24, 24)), jnp.float32)
+        aff, lab, mar = assign_ops.assign(v, p, compute_dtype="fp32",
+                                          interpret=True,
+                                          block_b=128, block_d2=8192)
+        aff_r, lab_r, mar_r = assign_ref(v, p)
+        np.testing.assert_allclose(np.asarray(aff), np.asarray(aff_r),
+                                   rtol=1e-4, atol=1e-4)
+        assert (np.asarray(lab) == np.asarray(lab_r)).all()
+
+    def test_bf16_drift_bounded_across_kernels(self):
+        """bf16 compute with fp32 accumulation stays within a relative
+        drift budget of the fp32 reference at a realistic scale."""
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.standard_normal((256, 96)), jnp.float32)
+        ref = np.asarray(gram_ref(x))
+        out = np.asarray(gram_ops.gram_matrix(x.astype(jnp.bfloat16),
+                                              interpret=True))
+        assert np.abs(out - ref).max() / np.abs(ref).max() < 3e-2
+        v, p = TestAssignKernel._case(8, 4, 48, 6, seed=7)
+        aff_b = np.asarray(assign_ops.assign(v, p, compute_dtype="bf16",
+                                             interpret=True)[0])
+        aff_f = np.asarray(assign_ref(v, p)[0])
+        assert np.abs(aff_b - aff_f).max() / np.abs(aff_f).max() < 3e-2
+
+
+class TestDispatch:
+    def test_resolve_none_tracks_backend(self):
+        expect = jax.default_backend() not in dispatch.LOWERED_BACKENDS
+        assert dispatch.resolve_interpret(None) is expect
+
+    def test_explicit_passthrough(self):
+        assert dispatch.resolve_interpret(True) is True
+        assert dispatch.resolve_interpret(False) is False
+
+    def test_supports_lowering_consistent(self):
+        assert dispatch.supports_lowering() == (
+            dispatch.backend_kind() in dispatch.LOWERED_BACKENDS)
+
+
+class TestTuning:
+    def test_divisor_block(self):
+        assert tuning.divisor_block(1024, cap=512) == 512
+        assert tuning.divisor_block(384, cap=512) == 384
+        assert tuning.divisor_block(640, cap=512) == 128
+        assert tuning.divisor_block(128, cap=512) == 128
+
+    def test_shape_bucket_pow2(self):
+        assert tuning.shape_bucket(n=1000, d=64) == tuning.shape_bucket(
+            n=1024, d=64)
+        assert tuning.shape_bucket(n=1025, d=64) != tuning.shape_bucket(
+            n=1024, d=64)
+
+    def test_heuristics_cover_all_kernels(self):
+        dims = {"gram": dict(n=300, d=70), "gram_project": dict(n=300, k=70),
+                "featurize_gram": dict(n=300), "eigproject": dict(d=70, k=9),
+                "linkage": dict(n=256), "assign": dict(b=64, d2=1024)}
+        for kernel in tuning.KERNELS:
+            blocks = tuning.heuristic_blocks(kernel, **dims[kernel])
+            assert blocks, kernel
+            for k, val in blocks.items():
+                if isinstance(val, bool):
+                    continue
+                assert val >= 1 and val % 128 == 0, (kernel, k, val)
+
+    def test_unknown_kernel_rejected(self):
+        with pytest.raises(ValueError, match="unknown kernel"):
+            tuning.heuristic_blocks("conv", n=8)
+
+    def test_record_overlays_heuristic(self):
+        tuning.clear_cache()
+        try:
+            base = tuning.get_blocks("gram", n=256, d=64)
+            tuning.record("gram", {"block_n": 128}, n=256, d=64)
+            got = tuning.get_blocks("gram", n=256, d=64)
+            assert got["block_n"] == 128
+            assert got["block_d"] == base["block_d"]  # heuristic kept
+        finally:
+            tuning.clear_cache()
+
+    def test_cache_persists_via_env(self, tmp_path, monkeypatch):
+        cache = tmp_path / "tune" / "cache.json"
+        monkeypatch.setenv("REPRO_TUNE_CACHE", str(cache))
+        tuning.clear_cache()
+        try:
+            tuning.record("assign", {"block_b": 256, "block_d2": 1024},
+                          measured_s=1e-3, b=64, d2=1024)
+            assert cache.exists()
+            tuning.clear_cache()               # drop memory; reload disk
+            hit = tuning.lookup("assign", b=64, d2=1024)
+            assert hit == {"block_b": 256, "block_d2": 1024}
+        finally:
+            tuning.clear_cache()
+
+    def test_autotune_picks_fastest_and_skips_invalid(self):
+        tuning.clear_cache()
+        calls = []
+
+        def run(blocks):
+            calls.append(dict(blocks))
+            if blocks["block"] == 999:
+                raise ValueError("bad divisibility")
+            time.sleep(0.001 if blocks["block"] == 128 else 0.004)
+
+        try:
+            best = tuning.autotune("linkage", run,
+                                   [{"block": 999}, {"block": 128},
+                                    {"block": 512}],
+                                   n_iter=1, warmup=0, n=512)
+            assert best == {"block": 128}
+            assert tuning.lookup("linkage", n=512) == {"block": 128}
+        finally:
+            tuning.clear_cache()
+
+    def test_autotune_all_invalid_raises(self):
+        def run(blocks):
+            raise ValueError("never valid")
+
+        with pytest.raises(ValueError, match="no valid tuning candidate"):
+            tuning.autotune("linkage", run, [{"block": 7}], n=512)
+
+
+class TestQuant:
+    def test_int8_roundtrip_error_bound(self):
+        rng = np.random.default_rng(0)
+        p = rng.standard_normal((5, 16, 16)).astype(np.float32) * 3
+        q, sc = quant.quantize_directory(p, "int8")
+        assert q.dtype == np.int8 and sc.shape == (5,)
+        deq = quant.dequantize_directory(q, sc)
+        # symmetric quant: per-entry error <= half a step = amax/254
+        amax = np.abs(p).max(axis=(1, 2))
+        err = np.abs(deq - p).max(axis=(1, 2))
+        assert (err <= amax / 127).all()
+
+    def test_zero_prototype_safe(self):
+        p = np.zeros((2, 8, 8), np.float32)
+        q, sc = quant.quantize_directory(p, "int8")
+        assert (sc == 1.0).all()
+        assert (quant.dequantize_directory(q, sc) == 0.0).all()
+
+    def test_bf16_and_f32_have_no_scales(self):
+        p = np.ones((2, 4, 4), np.float32)
+        tb, sb = quant.quantize_directory(p, "bf16")
+        tf, sf = quant.quantize_directory(p, "f32")
+        assert sb is None and sf is None
+        assert tb.dtype == jnp.bfloat16
+        assert tf.dtype == np.float32
+
+    def test_nbytes_ratio(self):
+        p = np.zeros((8, 32, 32), np.float32)
+        f32 = quant.directory_nbytes(*quant.quantize_directory(p, "f32"))
+        i8 = quant.directory_nbytes(*quant.quantize_directory(p, "int8"))
+        assert f32 == 8 * 32 * 32 * 4
+        assert 3.9 < f32 / i8 <= 4.0
+
+    def test_array_family_preserved(self):
+        p_np = np.ones((2, 4, 4), np.float32)
+        q_np, _ = quant.quantize_directory(p_np, "int8")
+        assert isinstance(q_np, np.ndarray)
+        q_j, _ = quant.quantize_directory(jnp.asarray(p_np), "int8")
+        assert isinstance(q_j, jax.Array)
+
+    def test_unknown_dtype_rejected(self):
+        with pytest.raises(ValueError, match="directory dtype"):
+            quant.quantize_directory(np.zeros((1, 2, 2), np.float32), "fp8")
+
+
+class TestAssignQuantizedAndChunked:
+    def test_int8_directory_matches_dequantized_ref(self):
+        rng = np.random.default_rng(1)
+        v = jnp.asarray(rng.standard_normal((6, 20, 4)), jnp.float32)
+        p = rng.standard_normal((5, 20, 20)).astype(np.float32)
+        p = (p + p.transpose(0, 2, 1)) / 2
+        q, sc = quant.quantize_directory(jnp.asarray(p), "int8")
+        aff, lab, mar = assign_ops.assign(v, q, scales=sc,
+                                          compute_dtype="fp32",
+                                          interpret=True)
+        deq = quant.dequantize_directory(q, sc)
+        aff_r, lab_r, mar_r = assign_ref(v, deq)
+        np.testing.assert_allclose(np.asarray(aff), np.asarray(aff_r),
+                                   rtol=1e-4, atol=1e-4)
+        assert (np.asarray(lab) == np.asarray(lab_r)).all()
+        np.testing.assert_allclose(np.asarray(mar), np.asarray(mar_r),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_wave_chunking_matches_single_dispatch(self, monkeypatch):
+        """Waves larger than the S-footprint cap split into mapped chunks
+        that must agree with the unchunked path exactly."""
+        rng = np.random.default_rng(2)
+        v = jnp.asarray(rng.standard_normal((96, 17, 3)), jnp.float32)
+        p = jnp.asarray(rng.standard_normal((4, 17, 17)), jnp.float32)
+        whole = assign_ops.assign(v, p, compute_dtype="fp32",
+                                  interpret=True, block_b=32,
+                                  block_d2=512)
+        # Cap the per-dispatch S footprint so b=96 > chunk and the
+        # lax.map path engages (512 lanes * 32 rows per chunk).
+        monkeypatch.setattr(assign_ops, "_MAX_S_ELEMS", 512 * 32)
+        chunked = assign_ops.assign(v, p, compute_dtype="fp32",
+                                    interpret=True, block_b=32,
+                                    block_d2=512)
+        for a, b in zip(whole, chunked):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-5)
+
+
+class TestDoubleBuffer:
+    """The DMA double-buffered streaming paths must agree with their grid
+    counterparts bit-for-bit at fp32 (same accumulation order per block)."""
+
+    def test_featurize_gram_double_buffer_parity(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.standard_normal((384, 128)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((128, 64)), jnp.float32)
+        grid = fg_ops.featurize_gram(x, w, block_n=128,
+                                     double_buffer=False, interpret=True)
+        db = fg_ops.featurize_gram(x, w, block_n=128,
+                                   double_buffer=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(db), np.asarray(grid),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_gram_project_double_buffer_parity(self):
+        rng = np.random.default_rng(4)
+        x = jnp.asarray(rng.standard_normal((256, 96)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((96, 8)), jnp.float32)
+        grid = gp_ops.gram_project(x, v, block_n=128, block_k=128,
+                                   double_buffer=False, interpret=True)
+        db = gp_ops.gram_project(x, v, block_n=128, block_k=128,
+                                 double_buffer=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(db), np.asarray(grid),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_double_buffer_non_divisible_rows(self):
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.standard_normal((200, 48)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((48, 16)), jnp.float32)
+        db = fg_ops.featurize_gram(x, w, block_n=128, double_buffer=True,
+                                   interpret=True)
+        np.testing.assert_allclose(np.asarray(db),
+                                   np.asarray(featurize_gram_ref(x, w)),
+                                   rtol=1e-3, atol=1e-3)

@@ -422,3 +422,74 @@ def test_sharded_requires_device_backend(seed_result):
     res, _ = seed_result
     with pytest.raises(ValueError, match="device backend"):
         eng.assign_sharded(res.lam, res.v)
+
+
+class TestQuantizedDirectory:
+    """``directory_dtype``: the serving directory stored bf16/int8 with
+    dequant-in-kernel scoring — verdicts must survive the compression."""
+
+    @pytest.mark.parametrize("dtype", ("f32", "bf16", "int8"))
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_backend_parity_per_dtype(self, seed_result, wave, backend,
+                                      dtype):
+        """All backends score the SAME dequantized table, so labels are
+        exactly equal across backends at every directory dtype."""
+        lam_w, v_w, _ = wave
+        base = make_engine(seed_result, "numpy",
+                           directory_dtype=dtype).assign(lam_w, v_w)
+        out = make_engine(seed_result, backend,
+                          directory_dtype=dtype).assign(lam_w, v_w)
+        assert (np.asarray(out.labels) == np.asarray(base.labels)).all()
+
+    @pytest.mark.parametrize("dtype", ("bf16", "int8"))
+    def test_agreement_vs_f32(self, seed_result, wave, dtype):
+        lam_w, v_w, _ = wave
+        f32 = make_engine(seed_result, "jnp").assign(lam_w, v_w)
+        q = make_engine(seed_result, "jnp",
+                        directory_dtype=dtype).assign(lam_w, v_w)
+        agree = (np.asarray(q.labels) == np.asarray(f32.labels)).mean()
+        assert agree >= 0.99
+
+    def test_directory_bytes_ratio(self, seed_result):
+        f32 = make_engine(seed_result, "jnp").state.directory_bytes
+        bf16 = make_engine(seed_result, "jnp",
+                           directory_dtype="bf16").state.directory_bytes
+        i8 = make_engine(seed_result, "jnp",
+                         directory_dtype="int8").state.directory_bytes
+        assert f32 / bf16 == 2.0
+        assert 3.8 < f32 / i8 <= 4.0
+
+    def test_state_holds_quantized_table_and_scales(self, seed_result):
+        st = make_engine(seed_result, "jnp", directory_dtype="int8").state
+        assert np.asarray(st.protos).dtype == np.int8
+        assert st.proto_scales is not None
+        assert np.asarray(st.proto_scales).shape == (st.n_clusters,)
+        assert np.asarray(st.protos_f32).dtype == np.float32
+
+    @pytest.mark.parametrize("backend", ("numpy", "jnp", "pallas"))
+    def test_lifecycle_requantizes(self, seed_result, wave, backend):
+        """Admit/evict on an int8 directory: the table stays int8 (the
+        dequant -> update -> requant stream never leaves a resident f32
+        copy) and the round-trip restores prototypes to quant tolerance."""
+        lam_w, v_w, _ = wave
+        eng = make_engine(seed_result, backend, directory_dtype="int8")
+        p0 = np.asarray(eng.state.protos_f32)
+        out = eng.assign(lam_w, v_w)
+        slots = eng.admit(lam_w, v_w, out.labels)
+        assert np.asarray(eng.state.protos).dtype == np.int8
+        eng.evict(slots)
+        assert np.asarray(eng.state.protos).dtype == np.int8
+        step = np.abs(p0).max() / 127
+        assert np.abs(np.asarray(eng.state.protos_f32) - p0).max() < 4 * step
+
+    def test_drift_stats_work_quantized(self, seed_result, wave):
+        lam_w, v_w, _ = wave
+        eng = make_engine(seed_result, "jnp", directory_dtype="int8")
+        out = eng.assign(lam_w, v_w)
+        eng.admit(lam_w, v_w, out.labels)
+        s = eng.drift_stats()
+        assert np.isfinite(s["proto_shift"])
+
+    def test_bad_dtype_rejected(self, seed_result):
+        with pytest.raises(ValueError, match="directory_dtype"):
+            make_engine(seed_result, "jnp", directory_dtype="fp8")
