@@ -64,6 +64,8 @@ DEFAULT_BLOCKS = {
     "featurize_gram": {"block_n": 128, "double_buffer": False},
     "eigproject": {"block_d": 128, "block_k": 128},
     "linkage": {"block": 128},
+    # pre-tuning chunking for the serving recurrences (bench_serve)
+    "recurrent_scan": {"chunk": 16, "block_d": 128},
 }
 
 

@@ -1,0 +1,279 @@
+"""Serving-path benchmark: static vs continuous batching + the
+``recurrent_scan`` kernel family.
+
+Three sections, all recorded into ``--json``
+(``benchmarks/results/bench_serve.json``):
+
+* **prefill dispatches** — COUNTED, not estimated: the old per-token
+  ``greedy_decode`` path counts one jitted dispatch per prompt token
+  (``DecodeStats.prefill_dispatches``); the ``ServeEngine`` wave prefill
+  counts ONE host dispatch per admission wave, whose single ``lax.scan``
+  covers ``max_prompt / prefill_chunk`` chunk steps
+  (``ServeStats.prefill_dispatches`` / ``prefill_scan_steps``).
+* **throughput** — the same ragged batch-8 request mix served two ways:
+  the old static path (pad every prompt/gen to the max, per-token
+  dispatch, useful tokens only counted) vs the continuous slot
+  scheduler.  TTFT, slot utilization, and trace counts ride along; full
+  mode asserts the >= 3x aggregate-tok/s acceptance bar.  A per-request
+  sequential ``greedy_decode`` replay asserts the scheduler's outputs
+  are token-identical.
+* **recurrent_scan grid** — tuned vs default (pre-tuning 16/128 plan) vs
+  jnp (``time_mix_chunked`` for wkv, ``associative_scan`` for the
+  rglru recurrence), same harness as ``bench_kernels._bench_family``,
+  plus fp32/bf16 parity vs the sequential fp32 oracle (bf16 <= 1e-3 at
+  serving-scale activations).
+
+Standalone: ``PYTHONPATH=src:. python benchmarks/bench_serve.py --quick``
+(CI smoke: shrunken shapes, same code paths).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from benchmarks.bench_kernels import DEFAULT_BLOCKS, _bench_family
+from repro.configs.base import ArchConfig
+from repro.kernels import tuning
+from repro.kernels.dispatch import resolve_interpret
+from repro.kernels.recurrent_scan import ops as rs_ops
+from repro.kernels.recurrent_scan.ref import linear_scan_ref, wkv_ref
+from repro.launch.decode_loop import (ClusterHeads, Request, ServeConfig,
+                                      ServeEngine, cluster_logits_fn,
+                                      greedy_decode)
+from repro.models import rwkv6
+from repro.models.registry import get_model
+
+
+# ---------------------------------------------------------------------------
+# Serving comparison
+# ---------------------------------------------------------------------------
+
+def _bench_arch(quick: bool) -> ArchConfig:
+    d = 64 if quick else 128
+    return ArchConfig(name="serve_bench", arch_type="dense",
+                      n_layers=2, d_model=d, n_heads=4, n_kv_heads=2,
+                      d_ff=2 * d, vocab=257, head_dim=d // 4,
+                      block_pattern=("attn",), param_dtype="float32",
+                      act_dtype="float32", scan_layers=False)
+
+
+def _ragged_mix(rng, n: int, vocab: int, max_prompt: int, max_gen: int,
+                clusters: int) -> list[Request]:
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(max(4, max_prompt // 4), max_prompt + 1))
+        gen = int(rng.integers(max(2, max_gen // 4), max_gen + 1))
+        reqs.append(Request(
+            tokens=rng.integers(0, vocab, size=plen).astype(np.int32),
+            gen=gen, cluster=i % clusters))
+    return reqs
+
+
+def _bench_serving(rng, quick: bool, records: list) -> list[str]:
+    cfg = _bench_arch(quick)
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    n_clusters = 2 if quick else 4
+    heads = ClusterHeads.init(jax.random.PRNGKey(1), params["head"],
+                              n_clusters)
+    max_prompt, max_gen = (16, 8) if quick else (64, 32)
+    chunk = 8 if quick else 16
+    reqs = _ragged_mix(rng, 8, cfg.vocab, max_prompt, max_gen, n_clusters)
+    useful_tok = sum(r.gen for r in reqs)
+
+    # -- old path: one static batch-8, everything padded to the max ------
+    # NOTE: each call re-traces its step (the old path had no fixed-shape
+    # program — ragged mixes changed (batch, len) and retraced); a warmup
+    # call lets backend-level caches settle but the per-call trace stays,
+    # exactly as it did in production.
+    prompts = np.zeros((len(reqs), max_prompt), np.int32)
+    for j, r in enumerate(reqs):
+        prompts[j, max_prompt - len(r.tokens):] = r.tokens   # left pad
+    lfn = cluster_logits_fn(heads, 0)
+    greedy_decode(m, params, jnp.asarray(prompts), 2, logits_fn=lfn)
+    t0 = time.perf_counter()
+    static = greedy_decode(m, params, jnp.asarray(prompts), max_gen,
+                           logits_fn=lfn)
+    static_wall = time.perf_counter() - t0
+    static_tok_s = useful_tok / static_wall
+
+    # -- continuous path on the identical mix ----------------------------
+    scfg = ServeConfig(slots=8, wave=4, prefill_chunk=chunk,
+                       max_prompt=max_prompt, max_gen=max_gen,
+                       max_len=max_prompt + max_gen)
+    engine = ServeEngine(m, params, heads, scfg)
+    engine.serve(reqs[:2])                     # warm the three programs
+    stats = engine.serve(reqs)
+
+    # token identity vs per-request sequential decode
+    for i in range(2 if quick else 3):
+        r = reqs[i]
+        base = greedy_decode(m, params, jnp.asarray(r.tokens)[None, :],
+                             r.gen,
+                             logits_fn=cluster_logits_fn(heads, r.cluster))
+        assert np.array_equal(np.asarray(base.tokens[0]),
+                              stats.results[i].tokens), (
+            f"slot scheduler diverged from sequential decode on request {i}")
+
+    # counted dispatch accounting: old = one per prompt token; new = one
+    # per admission wave (each a P/chunk-step scan)
+    waves = stats.prefill_dispatches
+    assert static.prefill_dispatches == max_prompt
+    assert stats.prefill_scan_steps == max_prompt // chunk
+    assert waves * stats.prefill_scan_steps <= static.prefill_dispatches, (
+        "chunked prefill did not reduce dispatch count")
+    assert all(v == 1 for v in stats.traces.values()), (
+        f"serving programs retraced: {stats.traces}")
+
+    speedup = stats.aggregate_tok_per_s / static_tok_s
+    if not quick:
+        assert speedup >= 3.0, (
+            f"continuous batching {speedup:.2f}x vs static (< 3x) "
+            f"({stats.aggregate_tok_per_s:.0f} vs {static_tok_s:.0f} tok/s)")
+    records.append({
+        "section": "serving", "arch": cfg.name,
+        "requests": len(reqs), "useful_tokens": useful_tok,
+        "max_prompt": max_prompt, "max_gen": max_gen,
+        "prefill_chunk": chunk,
+        "static_tok_per_s": round(static_tok_s, 1),
+        "static_wall_s": round(static_wall, 3),
+        "static_prefill_dispatches": static.prefill_dispatches,
+        "static_ttft_s": round(static.ttft_s, 4),
+        "continuous_tok_per_s": round(stats.aggregate_tok_per_s, 1),
+        "continuous_wall_s": round(stats.wall_s, 3),
+        "continuous_prefill_dispatches": waves,
+        "prefill_scan_steps": stats.prefill_scan_steps,
+        "continuous_decode_dispatches": stats.decode_dispatches,
+        "mean_ttft_s": round(stats.mean_ttft_s, 4),
+        "slot_utilization": round(stats.slot_utilization, 3),
+        "traces": stats.traces,
+        "speedup_vs_static": round(speedup, 2),
+        "token_identical_vs_sequential": True,
+    })
+    return [common.row(
+        "serve_continuous_vs_static_b8", stats.wall_s * 1e6,
+        continuous_tok_s=round(stats.aggregate_tok_per_s, 1),
+        static_tok_s=round(static_tok_s, 1),
+        speedup=round(speedup, 2),
+        prefill_dispatches=f"{waves}x{stats.prefill_scan_steps}steps"
+                           f"_vs_{static.prefill_dispatches}",
+        mean_ttft_ms=round(stats.mean_ttft_s * 1e3, 1),
+        slot_util=round(stats.slot_utilization, 2))]
+
+
+# ---------------------------------------------------------------------------
+# recurrent_scan kernel grid + parity
+# ---------------------------------------------------------------------------
+
+def _wkv_inputs(rng, b, h, s, hd, scale=0.1):
+    f = jnp.float32
+    r = jnp.asarray(rng.standard_normal((b, s, h, hd)) * scale, f)
+    k = jnp.asarray(rng.standard_normal((b, s, h, hd)) * scale, f)
+    v = jnp.asarray(rng.standard_normal((b, s, h, hd)) * scale, f)
+    logw = -jnp.asarray(np.exp(rng.standard_normal((b, s, h, hd)) - 1.0), f)
+    u = jnp.asarray(rng.standard_normal((h, hd)) * scale, f)
+    state = jnp.zeros((b, h, hd, hd), f)
+    return r, k, v, logw, u, state
+
+
+def _bench_wkv(rng, quick, tune, records):
+    b, h, s, hd = (2, 2, 128, 64) if quick else (4, 4, 512, 64)
+    r, k, v, logw, u, state = _wkv_inputs(rng, b, h, s, hd)
+    ref = jax.jit(lambda: rwkv6.time_mix_chunked(r, k, v, logw, u, state,
+                                                 chunk=64)[0])
+    rows = [_bench_family(
+        "recurrent_scan", f"wkv_{b}x{h}x{s}x{hd}", ref,
+        lambda blk: rs_ops.wkv_chunked(r, k, v, logw, u, state,
+                                       chunk=blk["chunk"])[0],
+        dict(s=s, d=hd), tune, records)]
+
+    # parity vs the sequential fp32 oracle, serving-scale activations
+    want = np.asarray(wkv_ref(r, k, v, logw, u, state)[0])
+    err = {}
+    for cd in ("fp32", "bf16"):
+        got = np.asarray(rs_ops.wkv_chunked(r, k, v, logw, u, state,
+                                            compute_dtype=cd)[0],
+                         np.float32)
+        err[cd] = float(np.abs(got - want).max())
+    assert err["fp32"] <= 1e-4, f"wkv fp32 parity {err['fp32']:.2e}"
+    assert err["bf16"] <= 1e-3, f"wkv bf16 parity {err['bf16']:.2e}"
+    records.append({"section": "parity", "kernel": "recurrent_scan/wkv",
+                    "shape": f"{b}x{h}x{s}x{hd}",
+                    "max_abs_err_fp32": err["fp32"],
+                    "max_abs_err_bf16": err["bf16"]})
+    rows.append(common.row(
+        f"recurrent_scan_wkv_parity_{b}x{h}x{s}x{hd}", 0.0,
+        err_fp32=f"{err['fp32']:.1e}", err_bf16=f"{err['bf16']:.1e}"))
+    return rows
+
+
+def _bench_linear_scan(rng, quick, tune, records):
+    b, s, d = (4, 256, 256) if quick else (8, 1024, 512)
+    f = jnp.float32
+    log_a = -jnp.asarray(np.exp(rng.standard_normal((b, s, d)) - 2.0), f)
+    x = jnp.asarray(rng.standard_normal((b, s, d)) * 0.1, f)
+    h0 = jnp.asarray(rng.standard_normal((b, d)) * 0.1, f)
+
+    @jax.jit
+    def assoc_ref():
+        x0 = x.at[:, 0, :].add(jnp.exp(log_a[:, 0, :]) * h0)
+
+        def comb(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 + a2, jnp.exp(a2) * b1 + b2
+
+        _, h = jax.lax.associative_scan(comb, (log_a, x0), axis=1)
+        return h
+
+    rows = [_bench_family(
+        "recurrent_scan", f"rglru_{b}x{s}x{d}", assoc_ref,
+        lambda blk: rs_ops.linear_scan(log_a, x, h0, chunk=blk["chunk"],
+                                       block_d=blk["block_d"])[0],
+        dict(s=s, d=d), tune, records)]
+
+    want = np.asarray(linear_scan_ref(log_a, x, h0)[0])
+    got = np.asarray(rs_ops.linear_scan(log_a, x, h0)[0])
+    err = float(np.abs(got - want).max())
+    assert err <= 1e-4, f"linear_scan fp32 parity {err:.2e}"
+    records.append({"section": "parity",
+                    "kernel": "recurrent_scan/linear_scan",
+                    "shape": f"{b}x{s}x{d}", "max_abs_err_fp32": err})
+    return rows
+
+
+def run(quick: bool = False, tune: bool = False,
+        json_path: str | None = None) -> list[str]:
+    rng = np.random.default_rng(0)
+    records: list[dict] = []
+    rows = _bench_serving(rng, quick, records)
+    rows += _bench_wkv(rng, quick, tune, records)
+    rows += _bench_linear_scan(rng, quick, tune, records)
+    if json_path:
+        common.record_result(json_path, {
+            "quick": quick, "tuned_sweep": tune,
+            "pallas_interpret": bool(resolve_interpret(None)),
+            "tune_cache_file": str(tuning.cache_path() or ""),
+            "default_blocks": DEFAULT_BLOCKS["recurrent_scan"],
+            "records": records,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: shrunken shapes, same code paths")
+    ap.add_argument("--tune", action="store_true",
+                    help="run the measured autotune sweep first (persists "
+                         "when REPRO_TUNE_CACHE is set)")
+    ap.add_argument("--json", default="benchmarks/results/bench_serve.json",
+                    help="where to record the serving + kernel grid")
+    args = ap.parse_args()
+    for r in run(quick=args.quick, tune=args.tune, json_path=args.json):
+        print(r, flush=True)

@@ -20,7 +20,7 @@ import time
 
 SUITES = ["table1", "table2", "fig2", "fig3", "fig4", "comm", "ifca",
           "robustness", "kernels", "clustering", "signature", "pipeline",
-          "membership", "scale", "roofline"]
+          "membership", "scale", "roofline", "serve"]
 
 
 def run_suite(name: str, seeds: int) -> list[str]:
@@ -29,8 +29,8 @@ def run_suite(name: str, seeds: int) -> list[str]:
                             bench_fig4_eigvectors, bench_ifca,
                             bench_kernels, bench_membership,
                             bench_pipeline, bench_robustness,
-                            bench_roofline, bench_scale, bench_signature,
-                            bench_table1_similarity,
+                            bench_roofline, bench_scale, bench_serve,
+                            bench_signature, bench_table1_similarity,
                             bench_table2_crossdataset)
 
     s = tuple(range(seeds))
@@ -58,6 +58,9 @@ def run_suite(name: str, seeds: int) -> list[str]:
         # baselines + the 10^5 hierarchical point) runs standalone
         "scale": lambda: bench_scale.run(quick=True),
         "roofline": lambda: bench_roofline.run(),
+        # likewise: the full acceptance run (batch-8 ragged mix, >= 3x
+        # continuous-vs-static assert) runs standalone
+        "serve": lambda: bench_serve.run(quick=True),
     }
     return fns[name]()
 

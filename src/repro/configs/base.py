@@ -41,6 +41,11 @@ class ArchConfig:
     # --- rwkv ---
     rwkv_head_dim: int = 64
     rwkv_chunk: int = 64
+    # recurrent-core impl for rwkv/rec blocks:
+    #   "" = default (chunked jnp rwkv, associative-scan rglru),
+    #   "scan" = sequential oracle, "chunked" = jnp chunked,
+    #   "pallas" = kernels/recurrent_scan fused path
+    rec_impl: str = ""
     # --- enc-dec (audio) ---
     encoder_layers: int = 0          # >0 => encoder-decoder
     # --- vlm early fusion ---

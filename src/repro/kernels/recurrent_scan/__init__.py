@@ -1,0 +1,2 @@
+from repro.kernels.recurrent_scan.ops import linear_scan, wkv_chunked
+from repro.kernels.recurrent_scan.ref import linear_scan_ref, wkv_ref

@@ -1,0 +1,54 @@
+"""fp32 references for the recurrent-scan kernel family.
+
+Standalone (no imports from ``repro.models``) so the kernel tests can
+diff Pallas output against a sequential oracle without dragging the full
+block machinery in.  Two recurrences share the family:
+
+* ``wkv_ref`` — the RWKV-6 time-mix state recurrence (matrix-valued
+  state ``S (hd_k, hd_v)`` per head, diagonal data-dependent decay, bonus
+  ``u`` on the current token).  Mirrors ``models/rwkv6.py::time_mix_ref``.
+* ``linear_scan_ref`` — the RG-LRU per-channel linear recurrence
+  ``h_t = exp(log_a_t) h_{t-1} + x_t``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["wkv_ref", "linear_scan_ref"]
+
+
+def wkv_ref(r, k, v, logw, u, state):
+    """Sequential fp32 oracle.  ``r/k/v/logw (B, S, H, hd)``, ``u (H, hd)``,
+    ``state (B, H, hd, hd)`` -> ``(out (B, S, H, hd) f32, final state f32)``."""
+    r, k, v, logw = (t.astype(jnp.float32) for t in (r, k, v, logw))
+    u = u.astype(jnp.float32)
+
+    def step(s_prev, inp):
+        r_t, k_t, v_t, lw_t = inp                       # (B, H, hd)
+        a = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        o = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       s_prev + u[None, :, :, None] * a)
+        s_new = jnp.exp(lw_t)[..., None] * s_prev + a
+        return s_new, o
+
+    seq = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, logw))
+    state, outs = jax.lax.scan(step, state.astype(jnp.float32), seq)
+    return jnp.moveaxis(outs, 0, 1), state
+
+
+def linear_scan_ref(log_a, x, h0):
+    """Sequential fp32 oracle for ``h_t = exp(log_a_t) h_{t-1} + x_t``.
+    ``log_a/x (B, S, D)``, ``h0 (B, D)`` -> ``(h (B, S, D) f32, h_last f32)``."""
+    log_a = log_a.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+
+    def step(h_prev, inp):
+        la_t, x_t = inp                                 # (B, D)
+        h = jnp.exp(la_t) * h_prev + x_t
+        return h, h
+
+    h_last, hs = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (jnp.moveaxis(log_a, 1, 0), jnp.moveaxis(x, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1), h_last

@@ -42,7 +42,7 @@ _LANE = 128
 
 #: Kernel families the tuner knows tile heuristics for.
 KERNELS = ("gram", "gram_project", "featurize_gram", "eigproject",
-           "linkage", "assign")
+           "linkage", "assign", "recurrent_scan")
 
 # In-memory overlay of the on-disk cache (survives the process even when
 # REPRO_TUNE_CACHE is unset — "tuning on" without persistence).
@@ -182,6 +182,15 @@ def heuristic_blocks(kernel: str, **dims: int) -> dict:
     if kernel == "linkage":
         return {"block": divisor_block(dims["n"],
                                        cap=512 if lowered else 4096)}
+    if kernel == "recurrent_scan":
+        # chunk = time tile (the sequential grid axis — its square drives
+        # the intra-chunk pairwise-decay footprint).  Lowered backends
+        # amortize the O(chunk^2) tile on the MXU, so bigger wins; the
+        # interpreter executes it eagerly, so the quadratic dominates and
+        # small chunks win.  block_d = channel tile.
+        chunk = max(8, min(64 if lowered else 16, _pow2_ceil(dims["s"])))
+        return {"chunk": chunk,
+                "block_d": tile(dims["d"], 256, 1024)}
     # assign: rows = arrival wave, lanes = flattened d*d directory axis
     return {"block_b": tile(dims["b"], 256, 1024),
             "block_d2": tile(dims["d2"], 512, 8192)}

@@ -1,56 +1,126 @@
-"""Shared prefill + greedy KV-cache decode loop.
+"""Cluster-routed continuous-batching LM serving.
 
-``launch/serve.py`` and ``examples/serve_demo.py`` both drive the same
-serving contract — teacher-forced prefill fills the cache token by token,
-then ``decode_step`` generates greedily — so the loop lives once, here.
-A blocked prefill kernel would batch the first phase on TPU; the contract
-(and therefore this loop's timings) is identical.
+Three layers, slowest to fastest:
+
+* ``greedy_decode`` — the uniform-batch baseline: one jitted dispatch per
+  token for prefill AND decode.  Kept as the reference path (and the
+  benchmark baseline) with honest phase accounting: ``decode_s`` covers
+  the ``gen - 1`` post-first-token steps (the first generated token is
+  argmaxed from the last prefill logits inside the prefill window), and
+  time-to-first-token is reported explicitly.
+* ``ClusterHeads`` / ``cluster_logits`` — per-cluster output heads plus a
+  low-rank adapter over the GPS-shared trunk: the multi-task serving
+  surface.  One gather per batch row selects its cluster's parameters
+  INSIDE the jit, so requests from different clusters share one program.
+* ``ServeEngine`` — the continuous-batching slot scheduler:
+
+    - admission waves run a single-dispatch chunked teacher-forced
+      prefill (ONE ``lax.scan`` over ``max_prompt / prefill_chunk``
+      chunks — dispatches drop O(prompt_len) -> O(1) per wave);
+    - decode holds a fixed ``(slots, max_len)`` state; every round steps
+      ALL slots with per-slot lengths and per-slot cluster ids; finished
+      requests free their slot and queued requests are admitted by
+      scattering the wave's prefilled state into free slots — all through
+      traced masks/lengths, so admits/frees/ragged mixes NEVER retrace
+      (the same traced-scalar pattern as ``MTHFLConfig.dropout_frac``;
+      ``ServeEngine.traces`` counts actual traces to prove it).
+
+  Cluster ids come from ``MembershipEngine.assign`` over
+  ``data/tokens.py::token_features`` signatures (``route_requests``) —
+  routing costs one signature + one directory matmul per request, vs
+  IFCA's per-cluster loss probe through every cluster's full model.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["DecodeStats", "greedy_decode"]
+PyTree = Any
 
+__all__ = ["DecodeStats", "greedy_decode", "ClusterHeads", "cluster_logits",
+           "cluster_logits_fn", "Request", "RequestResult", "ServeConfig",
+           "ServeStats", "ServeEngine", "token_signature", "route_requests"]
+
+
+# ---------------------------------------------------------------------------
+# Uniform-batch baseline (per-token dispatch) + honest stats
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class DecodeStats:
-    """One serving run: generated tokens + phase wall-clock."""
+    """One serving run: generated tokens + phase wall-clock.
+
+    ``prefill_s`` covers the teacher-forced prompt forward; ``ttft_s``
+    additionally includes the first-token argmax (time-to-first-token);
+    ``decode_s`` covers exactly the ``gen - 1`` incremental steps that
+    produce tokens 2..gen — so ``tok_per_s`` divides the tokens that
+    phase actually produced, not ``batch * gen``.
+    """
 
     tokens: jax.Array          # (batch, gen) greedy continuations
     prompt_len: int
     prefill_s: float
+    ttft_s: float
     decode_s: float
+    prefill_dispatches: int    # counted jitted dispatches in prefill
 
     @property
     def tok_per_s(self) -> float:
+        """Decode-phase throughput over the steps ``decode_s`` covers."""
         b, g = self.tokens.shape
-        return b * g / max(self.decode_s, 1e-9)
+        return b * (g - 1) / max(self.decode_s, 1e-9)
+
+    @property
+    def total_tok_per_s(self) -> float:
+        """End-to-end throughput incl. prefill + first token."""
+        b, g = self.tokens.shape
+        return b * g / max(self.ttft_s + self.decode_s, 1e-9)
 
 
-def greedy_decode(model, params, prompts: jax.Array, gen: int
+def greedy_decode(model, params, prompts: jax.Array, gen: int,
+                  logits_fn: Callable[[jax.Array], jax.Array] | None = None
                   ) -> DecodeStats:
     """Prefill ``prompts (batch, prompt_len)`` through a fresh decode
-    state, then generate ``gen`` tokens greedily.  Returns the tokens
-    (the first one is argmax of the last prefill logits) and timings."""
+    state ONE TOKEN PER DISPATCH, then generate ``gen`` tokens greedily.
+
+    ``logits_fn(hn (B, d)) -> (B, V)`` swaps the stock LM head for a
+    custom readout (e.g. one cluster's head/adapter via
+    ``cluster_logits_fn``) while keeping the identical trunk — the
+    sequential baseline the slot scheduler is verified token-identical
+    against.
+    """
     batch, prompt_len = prompts.shape
     state = model.init_decode_state(batch, prompt_len + gen)
-    step = jax.jit(model.decode_step)
+    if logits_fn is None:
+        step = jax.jit(model.decode_step)
+    else:
+        if model.decode_hidden is None:
+            raise ValueError("logits_fn needs a decoder bundle exposing "
+                             "decode_hidden")
 
-    t0 = time.time()
+        def _step(p, toks, st):
+            hn, st = model.decode_hidden(p, toks, st)
+            return logits_fn(hn[:, 0])[:, None, :], st
+
+        step = jax.jit(_step)
+
+    t0 = time.perf_counter()
     logits = None
     for t in range(prompt_len):
         logits, state = step(params, prompts[:, t:t + 1], state)
     jax.block_until_ready(logits)
-    prefill_s = time.time() - t0
+    prefill_s = time.perf_counter() - t0
 
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(tok)
+    ttft_s = time.perf_counter() - t0
     out = [tok]
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(gen - 1):
         logits, state = step(params, tok, state)
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
@@ -58,4 +128,428 @@ def greedy_decode(model, params, prompts: jax.Array, gen: int
     tokens = jnp.concatenate(out, axis=1)
     jax.block_until_ready(tokens)
     return DecodeStats(tokens=tokens, prompt_len=prompt_len,
-                       prefill_s=prefill_s, decode_s=time.time() - t0)
+                       prefill_s=prefill_s, ttft_s=ttft_s,
+                       decode_s=time.perf_counter() - t0,
+                       prefill_dispatches=prompt_len)
+
+
+# ---------------------------------------------------------------------------
+# Per-cluster heads/adapters over the GPS-shared trunk
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ClusterHeads:
+    """Per-cluster serving parameters: a full output head plus a low-rank
+    residual adapter on the final hidden, both selected PER ROW inside
+    the jit.  The trunk (embeddings + blocks) stays shared — the GPS
+    split of the MT-HFL trainer."""
+
+    head: jax.Array       # (T, d, vocab)
+    adapter_a: jax.Array  # (T, d, rank)
+    adapter_b: jax.Array  # (T, rank, d)
+
+    @property
+    def n_clusters(self) -> int:
+        return self.head.shape[0]
+
+    @classmethod
+    def init(cls, rng: jax.Array, base_head: jax.Array, n_clusters: int,
+             rank: int = 4, scale: float = 0.05) -> "ClusterHeads":
+        """Distinct per-cluster heads = shared base + seeded noise (stand-in
+        for per-cluster fine-tuned heads from ``_train_fused``)."""
+        d, v = base_head.shape
+        k1, k2, k3 = jax.random.split(rng, 3)
+        f32 = jnp.float32
+        return cls(
+            head=(base_head.astype(f32)[None]
+                  + scale * jax.random.normal(k1, (n_clusters, d, v), f32)),
+            adapter_a=scale * jax.random.normal(k2, (n_clusters, d, rank),
+                                                f32),
+            adapter_b=scale * jax.random.normal(k3, (n_clusters, rank, d),
+                                                f32),
+        )
+
+
+def cluster_logits(heads: ClusterHeads, hn: jax.Array, cids: jax.Array
+                   ) -> jax.Array:
+    """Routed readout: ``hn (B, d)`` normed hidden, ``cids (B,)`` cluster
+    ids -> ``(B, vocab)`` logits through each row's cluster head/adapter."""
+    hf = hn.astype(jnp.float32)
+    wa = jnp.take(heads.adapter_a, cids, axis=0)      # (B, d, r)
+    wb = jnp.take(heads.adapter_b, cids, axis=0)      # (B, r, d)
+    wh = jnp.take(heads.head, cids, axis=0)           # (B, d, V)
+    delta = jnp.einsum("br,brd->bd", jnp.einsum("bd,bdr->br", hf, wa), wb)
+    return jnp.einsum("bd,bdv->bv", hf + delta, wh)
+
+
+def cluster_logits_fn(heads: ClusterHeads, cluster: int
+                      ) -> Callable[[jax.Array], jax.Array]:
+    """A ``greedy_decode(logits_fn=...)`` readout pinned to one cluster —
+    op-for-op identical to the engine's routed path."""
+    def fn(hn):
+        cids = jnp.full((hn.shape[0],), cluster, jnp.int32)
+        return cluster_logits(heads, hn, cids)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Cluster routing from token-statistics signatures
+# ---------------------------------------------------------------------------
+
+def token_signature(tokens: np.ndarray, d: int = 32, k: int = 2,
+                    window: int = 16, vocab: int | None = None
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """One request's (lam (k,), v (d, k)) signature from its prompt token
+    statistics: ``token_features`` windows -> Gram -> top-k eigenpairs.
+    This is the entire per-request routing upload — O(d^2), independent
+    of any cluster model (vs IFCA's T full-model loss probes)."""
+    from repro.data.tokens import token_features
+
+    x = token_features(np.asarray(tokens, np.int64), d=d, window=window,
+                       vocab=vocab)
+    if x.shape[0] == 0:
+        return np.zeros(k, np.float32), np.zeros((d, k), np.float32)
+    g = x.T @ x / x.shape[0]
+    w, u = np.linalg.eigh(g.astype(np.float64))
+    return (w[-k:][::-1].astype(np.float32),
+            np.ascontiguousarray(u[:, -k:][:, ::-1]).astype(np.float32))
+
+
+def route_requests(membership, token_streams: Sequence[np.ndarray],
+                   d: int = 32, k: int = 2, window: int = 16,
+                   vocab: int | None = None) -> np.ndarray:
+    """Route a batch of requests to cluster ids through a seeded
+    ``MembershipEngine``: signatures -> ``assign`` -> labels.  Unassigned
+    verdicts (label -1, below the affinity/margin floors) fall back to
+    cluster 0 rather than stalling the request."""
+    sigs = [token_signature(t, d=d, k=k, window=window, vocab=vocab)
+            for t in token_streams]
+    lam = np.stack([s[0] for s in sigs])
+    v = np.stack([s[1] for s in sigs])
+    labels = np.asarray(membership.assign(lam, v).labels)
+    return np.where(labels < 0, 0, labels).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# The continuous-batching slot scheduler
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Static shapes of the serving program.  Everything here is baked
+    into the traced programs; everything per-request rides in as traced
+    arrays, so one trace serves every admit wave / ragged mix."""
+
+    slots: int = 8             # S: concurrent decode rows
+    max_len: int = 256         # per-slot KV/state capacity (prompt + gen)
+    prefill_chunk: int = 16    # C: tokens per prefill scan step
+    max_prompt: int = 64       # P: admission-wave prompt pad (mult of C)
+    wave: int = 4              # W: requests prefilled per admission wave
+    max_gen: int = 64          # cap on generated tokens per request
+
+    def validate(self) -> None:
+        if self.max_prompt % self.prefill_chunk:
+            raise ValueError(f"max_prompt {self.max_prompt} must be a "
+                             f"multiple of prefill_chunk "
+                             f"{self.prefill_chunk}")
+        if self.max_prompt + self.max_gen > self.max_len:
+            raise ValueError(f"max_prompt + max_gen "
+                             f"{self.max_prompt + self.max_gen} exceeds "
+                             f"max_len {self.max_len}")
+        if min(self.slots, self.wave, self.prefill_chunk, self.max_gen) < 1:
+            raise ValueError("slots/wave/prefill_chunk/max_gen must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    tokens: np.ndarray         # (prompt_len,) i32 prompt
+    gen: int                   # tokens to generate (>= 1)
+    cluster: int = 0           # routed cluster id (see route_requests)
+    arrive_round: int = 0      # earliest decode round it may be admitted
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestResult:
+    tokens: np.ndarray         # (gen,) generated tokens
+    ttft_s: float              # admission wall-clock -> first token
+    done_s: float              # wall-clock when the request completed
+    cluster: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeStats:
+    results: list[RequestResult]
+    wall_s: float
+    decode_rounds: int
+    prefill_dispatches: int    # counted host->device prefill dispatches
+    decode_dispatches: int     # counted decode-round dispatches
+    prefill_scan_steps: int    # chunks per wave inside the one dispatch
+    slot_utilization: float    # mean active-slot fraction per decode round
+    traces: dict[str, int]     # trace counts per jitted program
+
+    @property
+    def total_tokens(self) -> int:
+        return int(sum(len(r.tokens) for r in self.results))
+
+    @property
+    def aggregate_tok_per_s(self) -> float:
+        return self.total_tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def mean_ttft_s(self) -> float:
+        return float(np.mean([r.ttft_s for r in self.results]))
+
+
+class ServeEngine:
+    """Continuous-batching decode over a fixed slot grid.
+
+    Three jitted programs, each traced ONCE (shapes are pinned by
+    ``ServeConfig``; per-request variation rides in as traced data):
+
+      _prefill(params, heads, tokens (W,P), lengths (W,), cids (W,))
+          -> (first token (W,), wave state)   [one lax.scan over P/C chunks]
+      _admit(slot_state, wave_state, slot_ids (W,))
+          -> slot_state with wave rows scattered into free slots
+      _decode(params, heads, slot_state, cur_tok (S,), cids (S,),
+              active (S,)) -> (next token (S,), slot_state)
+
+    The host loop only makes scheduling decisions (which request enters
+    which free slot) over tiny (S,) arrays.
+    """
+
+    def __init__(self, model, params, heads: ClusterHeads,
+                 cfg: ServeConfig | None = None):
+        cfg = cfg or ServeConfig()
+        cfg.validate()
+        if model.prefill_chunk is None or model.decode_hidden is None:
+            raise ValueError("ServeEngine needs a decoder-only bundle "
+                             "(prefill_chunk/decode_hidden)")
+        if model.cfg.attn_window or model.cfg.local_window:
+            raise ValueError("slot scheduling serves full KV caches only "
+                             "(sliding-window archs unsupported)")
+        self.model = model
+        self.params = params
+        self.heads = heads
+        self.cfg = cfg
+        self.traces = {"prefill": 0, "admit": 0, "decode": 0}
+        self._build()
+
+    # -- traced programs ----------------------------------------------------
+
+    def _build(self) -> None:
+        model, scfg = self.model, self.cfg
+        s_slots, w = scfg.slots, scfg.wave
+        c, p = scfg.prefill_chunk, scfg.max_prompt
+        n_chunks = p // c
+        d_model = model.cfg.d_model
+        self.prefill_scan_steps = n_chunks
+
+        def prefill_fn(params, heads, tokens, lengths, cids):
+            self.traces["prefill"] += 1          # runs at trace time only
+            from repro.models import layers as L
+
+            state = model.init_decode_state(w, scfg.max_len, per_slot=True)
+            h_dt = state["length"].dtype  # placeholder; h_last in f32
+            del h_dt
+            tok_chunks = tokens.reshape(w, n_chunks, c).transpose(1, 0, 2)
+            pos = jnp.arange(p, dtype=jnp.int32).reshape(n_chunks, c)
+            h_last0 = jnp.zeros((w, d_model), jnp.float32)
+
+            def chunk_body(carry, inp):
+                st, h_last = carry
+                tok_c, pos_c = inp               # (W, C), (C,)
+                valid = pos_c[None, :] < lengths[:, None]
+                h, st = model.prefill_chunk(params, tok_c, st, pos_c[0],
+                                            valid)
+                # keep each row's hidden at its LAST VALID position
+                in_chunk = lengths[:, None] - 1 - pos_c[0]
+                g = jnp.take_along_axis(
+                    h, jnp.clip(in_chunk, 0, c - 1)[:, :, None], axis=1
+                )[:, 0].astype(jnp.float32)
+                h_last = jnp.where((in_chunk >= 0) & (in_chunk < c), g,
+                                   h_last)
+                return (st, h_last), None
+
+            (state, h_last), _ = jax.lax.scan(chunk_body, (state, h_last0),
+                                              (tok_chunks, pos))
+            hn = L.rms_norm(
+                h_last.astype(jnp.asarray(params["final_norm"]).dtype),
+                params["final_norm"])
+            first = jnp.argmax(cluster_logits(heads, hn, cids),
+                               axis=-1).astype(jnp.int32)
+            return first, state
+
+        def admit_fn(slot_state, wave_state, slot_ids):
+            self.traces["admit"] += 1
+
+            def put(slot_leaf, wave_leaf, batch_axis):
+                pads = []
+                for a, (ss, ws) in enumerate(zip(slot_leaf.shape,
+                                                 wave_leaf.shape)):
+                    pads.append((0, 0) if a == batch_axis else (0, ss - ws))
+                if any(pad != (0, 0) for pad in pads):
+                    wave_leaf = jnp.pad(wave_leaf, pads)
+                wave_leaf = wave_leaf.astype(slot_leaf.dtype)
+                if batch_axis == 0:
+                    return slot_leaf.at[slot_ids].set(wave_leaf, mode="drop")
+                return slot_leaf.at[:, slot_ids].set(wave_leaf, mode="drop")
+
+            out = dict(slot_state)
+            out["length"] = put(slot_state["length"], wave_state["length"], 0)
+            out["rest"] = jax.tree.map(lambda a, b: put(a, b, 0),
+                                       slot_state["rest"],
+                                       wave_state["rest"])
+            if "groups" in slot_state:
+                # scan-stacked groups carry a leading layer-group axis;
+                # the batch axis sits at position 1
+                out["groups"] = jax.tree.map(lambda a, b: put(a, b, 1),
+                                             slot_state["groups"],
+                                             wave_state["groups"])
+            if "groups_unrolled" in slot_state:
+                out["groups_unrolled"] = jax.tree.map(
+                    lambda a, b: put(a, b, 0),
+                    slot_state["groups_unrolled"],
+                    wave_state["groups_unrolled"])
+            return out
+
+        def decode_fn(params, heads, slot_state, cur_tok, cids, active):
+            self.traces["decode"] += 1
+            hn, new_state = model.decode_hidden(params, cur_tok[:, None],
+                                                slot_state)
+            nxt = jnp.argmax(cluster_logits(heads, hn[:, 0], cids),
+                             axis=-1).astype(jnp.int32)
+            # frozen (inactive) slots: length stays, token stays — their
+            # compute is masked out, their state is overwritten on admit
+            new_state["length"] = jnp.where(active,
+                                            slot_state["length"] + 1,
+                                            slot_state["length"])
+            return jnp.where(active, nxt, cur_tok), new_state
+
+        self._prefill = jax.jit(prefill_fn)
+        self._admit = jax.jit(admit_fn, donate_argnums=(0,))
+        self._decode = jax.jit(decode_fn, donate_argnums=(2,))
+        self._init_slots = jax.jit(
+            lambda: model.init_decode_state(s_slots, scfg.max_len,
+                                            per_slot=True))
+
+    # -- host scheduling loop ----------------------------------------------
+
+    def _check(self, requests: Sequence[Request]) -> None:
+        scfg = self.cfg
+        t = self.heads.n_clusters
+        for i, r in enumerate(requests):
+            n = len(np.asarray(r.tokens))
+            if not 1 <= n <= scfg.max_prompt:
+                raise ValueError(f"request {i}: prompt len {n} outside "
+                                 f"[1, {scfg.max_prompt}]")
+            if not 1 <= r.gen <= scfg.max_gen:
+                raise ValueError(f"request {i}: gen {r.gen} outside "
+                                 f"[1, {scfg.max_gen}]")
+            if n + r.gen > scfg.max_len:
+                raise ValueError(f"request {i}: prompt+gen {n + r.gen} "
+                                 f"exceeds max_len {scfg.max_len}")
+            if not 0 <= r.cluster < t:
+                raise ValueError(f"request {i}: cluster {r.cluster} outside "
+                                 f"directory [0, {t})")
+
+    def serve(self, requests: Sequence[Request]) -> ServeStats:
+        """Run every request to completion, admitting continuously as
+        slots free up.  Returns per-request tokens + latencies and the
+        counted dispatch/trace/utilization telemetry."""
+        self._check(requests)
+        scfg = self.cfg
+        s_slots, w, p = scfg.slots, scfg.wave, scfg.max_prompt
+        n_req = len(requests)
+
+        t_start = time.perf_counter()
+        slot_state = self._init_slots()
+        active = np.zeros(s_slots, bool)
+        slot_req = np.full(s_slots, -1, np.int64)
+        remaining = np.zeros(s_slots, np.int64)
+        cur_tok = np.zeros(s_slots, np.int32)
+        cids = np.zeros(s_slots, np.int32)
+        out_toks: list[list[int]] = [[] for _ in range(n_req)]
+        ttft = np.zeros(n_req)
+        done = np.zeros(n_req)
+        pending = list(range(n_req))
+        rounds = prefill_dispatches = decode_dispatches = 0
+        active_slot_rounds = 0
+
+        while True:
+            free = np.flatnonzero(~active)
+            avail = [i for i in pending
+                     if requests[i].arrive_round <= rounds]
+            if len(avail) and len(free):
+                take = avail[:min(w, len(free))]
+                tokens = np.zeros((w, p), np.int32)
+                lengths = np.zeros(w, np.int32)
+                wcids = np.zeros(w, np.int32)
+                for j, i in enumerate(take):
+                    tk = np.asarray(requests[i].tokens, np.int32)
+                    tokens[j, :len(tk)] = tk
+                    lengths[j] = len(tk)
+                    wcids[j] = requests[i].cluster
+                first, wave_state = self._prefill(
+                    self.params, self.heads, jnp.asarray(tokens),
+                    jnp.asarray(lengths), jnp.asarray(wcids))
+                first = np.asarray(first)
+                prefill_dispatches += 1
+                now = time.perf_counter() - t_start
+                slot_ids = np.full(w, s_slots, np.int32)  # default: dropped
+                for j, i in enumerate(take):
+                    pending.remove(i)
+                    out_toks[i].append(int(first[j]))
+                    ttft[i] = now
+                    if requests[i].gen == 1:
+                        done[i] = now      # complete; never occupies a slot
+                        continue
+                    s = int(free[j])
+                    slot_ids[j] = s
+                    active[s] = True
+                    slot_req[s] = i
+                    remaining[s] = requests[i].gen - 1
+                    cur_tok[s] = first[j]
+                    cids[s] = requests[i].cluster
+                slot_state = self._admit(slot_state, wave_state,
+                                         jnp.asarray(slot_ids))
+                continue                   # admit again while possible
+            if not active.any():
+                if not pending:
+                    break
+                rounds += 1                # idle: wait for arrivals
+                continue
+
+            nxt, slot_state = self._decode(
+                self.params, self.heads, slot_state, jnp.asarray(cur_tok),
+                jnp.asarray(cids), jnp.asarray(active))
+            nxt = np.asarray(nxt)
+            decode_dispatches += 1
+            rounds += 1
+            active_slot_rounds += int(active.sum())
+            now = time.perf_counter() - t_start
+            for s in np.flatnonzero(active):
+                i = int(slot_req[s])
+                out_toks[i].append(int(nxt[s]))
+                remaining[s] -= 1
+                if remaining[s] == 0:
+                    done[i] = now
+                    active[s] = False
+                    slot_req[s] = -1
+                else:
+                    cur_tok[s] = nxt[s]
+
+        wall = time.perf_counter() - t_start
+        results = [RequestResult(tokens=np.asarray(out_toks[i], np.int32),
+                                 ttft_s=float(ttft[i]),
+                                 done_s=float(done[i]),
+                                 cluster=requests[i].cluster)
+                   for i in range(n_req)]
+        util = (active_slot_rounds / (decode_dispatches * s_slots)
+                if decode_dispatches else 0.0)
+        return ServeStats(results=results, wall_s=wall,
+                          decode_rounds=rounds,
+                          prefill_dispatches=prefill_dispatches,
+                          decode_dispatches=decode_dispatches,
+                          prefill_scan_steps=self.prefill_scan_steps,
+                          slot_utilization=util, traces=dict(self.traces))

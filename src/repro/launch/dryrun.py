@@ -108,12 +108,12 @@ def run_one(arch_id: str, shape_name: str, mesh_kind: str,
     opts = opts or SH.ShardingOptions()
 
     # --- The artifact: full-depth scanned program. ----------------------
-    t0 = time.time()
+    t0 = time.perf_counter()
     lowered = _build_lowered(cfg, shape, mesh, opts, block_impl)
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
     mem = RL.memory_summary(compiled)
     raw = _metrics(compiled)
 
@@ -236,11 +236,11 @@ def main() -> int:
                     continue
                 label = f"{arch} x {shape} x {mesh_kind}"
                 try:
-                    t0 = time.time()
+                    t0 = time.perf_counter()
                     result = run_one(arch, shape, mesh_kind, opts,
                                      args.verbose, args.attn_impl,
                                      args.block_impl)
-                    dt = time.time() - t0
+                    dt = time.perf_counter() - t0
                     print(f"[ok]   {label}  ({dt:.1f}s, "
                           f"bottleneck={result['roofline']['bottleneck']})",
                           flush=True)

@@ -23,9 +23,13 @@ class ModelBundle:
     init: Callable
     forward: Callable          # (params, batch, shard) -> (logits, aux)
     loss_fn: Callable          # (params, batch, shard) -> scalar
-    init_decode_state: Callable
+    init_decode_state: Callable  # (batch, max_len, per_slot=False) -> state
     decode_step: Callable      # (params, tokens, state, shard) -> (logits, st)
     is_encdec: bool
+    # Serving fast path (decoder-only; None for enc-dec):
+    decode_hidden: Callable | None = None   # -> (normed hidden (B,1,d), st)
+    prefill_chunk: Callable | None = None   # (params, tokens (B,C), state,
+    #                                          start, valid) -> (h (B,C,d), st)
 
 
 def get_model(cfg: ArchConfig) -> ModelBundle:
@@ -37,8 +41,8 @@ def get_model(cfg: ArchConfig) -> ModelBundle:
                 cfg, p, b, s or (lambda x, n: x)),
             loss_fn=lambda p, b, s=None: encdec.loss_fn(
                 cfg, p, b, s or (lambda x, n: x)),
-            init_decode_state=lambda batch, max_len: encdec.init_decode_state(
-                cfg, batch, max_len),
+            init_decode_state=lambda batch, max_len, per_slot=False:
+                encdec.init_decode_state(cfg, batch, max_len),
             decode_step=lambda p, t, st, s=None: encdec.decode_step(
                 cfg, p, t, st, s or (lambda x, n: x)),
             is_encdec=True,
@@ -50,9 +54,14 @@ def get_model(cfg: ArchConfig) -> ModelBundle:
             cfg, p, b, s or (lambda x, n: x)),
         loss_fn=lambda p, b, s=None: transformer.loss_fn(
             cfg, p, b, s or (lambda x, n: x)),
-        init_decode_state=lambda batch, max_len: transformer.init_decode_state(
-            cfg, batch, max_len),
+        init_decode_state=lambda batch, max_len, per_slot=False:
+            transformer.init_decode_state(cfg, batch, max_len, per_slot),
         decode_step=lambda p, t, st, s=None: transformer.decode_step(
             cfg, p, t, st, s or (lambda x, n: x)),
         is_encdec=False,
+        decode_hidden=lambda p, t, st, s=None: transformer.decode_hidden(
+            cfg, p, t, st, s or (lambda x, n: x)),
+        prefill_chunk=lambda p, t, st, start, valid, s=None:
+            transformer.prefill_chunk(cfg, p, t, st, start, valid,
+                                      s or (lambda x, n: x)),
     )

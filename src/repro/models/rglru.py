@@ -33,6 +33,7 @@ class RGLRUConfig:
     d_rnn: int = 0             # defaults to d_model
     conv_width: int = 4
     c: float = 8.0
+    impl: str = "scan"         # scan (associative) | pallas (fused chunked)
 
     @property
     def rnn_dim(self) -> int:
@@ -95,29 +96,57 @@ def init_rglru_state(cfg: RGLRUConfig, batch: int, dtype=jnp.float32) -> PyTree:
 
 
 def rglru_block_apply(params: PyTree, cfg: RGLRUConfig, x: jax.Array,
-                      state: PyTree | None = None
+                      state: PyTree | None = None,
+                      valid: jax.Array | None = None
                       ) -> tuple[jax.Array, PyTree]:
-    """Training/prefill.  ``x (B, S, d)`` -> (y (B, S, d), new state)."""
+    """Training/prefill.  ``x (B, S, d)`` -> (y (B, S, d), new state).
+
+    ``valid (B, S)`` bool marks live positions for ragged right-padded
+    chunks (serving prefill): pad positions are identity updates
+    (``log_a``/``x_in`` zeroed => a=1, input 0) and the conv carry is
+    gathered at each row's last valid inputs, so the final state equals a
+    per-row unpadded run.  Pad-position outputs are garbage.
+    """
     b, s, _ = x.shape
     if state is None:
         state = init_rglru_state(cfg, b)
     y_branch = jax.nn.gelu(x @ params["w_in_y"])
-    u = x @ params["w_in_x"]
-    u, conv_state = _conv1d_causal(params, u, state["conv"])
+    u_in = x @ params["w_in_x"]
+    u, conv_state = _conv1d_causal(params, u_in, state["conv"])
     log_a, x_in = _gates(params, u)
+    if valid is not None:
+        vm = valid[:, :, None]
+        log_a = jnp.where(vm, log_a, 0.0)
+        x_in = jnp.where(vm, x_in, 0.0)
+        # conv carry = the last (W-1) VALID conv inputs per row: token p
+        # sits at index p + W - 1 of [prev_carry | u_in], so a row with
+        # n valid tokens wants indices n .. n + W - 2 (n = 0 keeps the
+        # incoming carry untouched).
+        width = params["conv_w"].shape[0]
+        full = jnp.concatenate(
+            [state["conv"].astype(u_in.dtype), u_in], axis=1)
+        n_valid = jnp.sum(valid.astype(jnp.int32), axis=1)
+        idx = n_valid[:, None] + jnp.arange(width - 1)[None, :]
+        conv_state = jnp.take_along_axis(full, idx[..., None], axis=1)
 
-    # h_t = exp(log_a_t) h_{t-1} + x_in_t  via associative scan, with the
-    # incoming carry folded into the first element.
-    x_in = x_in.at[:, 0, :].add(jnp.exp(log_a[:, 0, :]) * state["h"])
+    if cfg.impl == "pallas" and s > 1:
+        from repro.kernels.recurrent_scan import ops as rs_ops
 
-    def combine(c1, c2):
-        a1, b1 = c1
-        a2, b2 = c2
-        return a1 + a2, jnp.exp(a2) * b1 + b2
+        h, h_last = rs_ops.linear_scan(log_a, x_in, state["h"])
+    else:
+        # h_t = exp(log_a_t) h_{t-1} + x_in_t  via associative scan, with
+        # the incoming carry folded into the first element.
+        x_in = x_in.at[:, 0, :].add(jnp.exp(log_a[:, 0, :]) * state["h"])
 
-    log_acc, h = jax.lax.associative_scan(combine, (log_a, x_in), axis=1)
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 + a2, jnp.exp(a2) * b1 + b2
+
+        _, h = jax.lax.associative_scan(combine, (log_a, x_in), axis=1)
+        h_last = h[:, -1, :]
     out = (h.astype(x.dtype) * y_branch) @ params["w_out"]
-    new_state = {"h": h[:, -1, :], "conv": conv_state}
+    new_state = {"h": h_last, "conv": conv_state}
     return out, new_state
 
 

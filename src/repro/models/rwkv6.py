@@ -45,7 +45,7 @@ class RWKVConfig:
     lora_mix: int = 32          # rank of the token-shift ddlerp LoRA
     lora_decay: int = 64        # rank of the decay LoRA
     chunk: int = 64             # chunk length for the parallel form
-    impl: str = "chunked"       # chunked | scan (oracle)
+    impl: str = "chunked"       # chunked | scan (oracle) | pallas (fused)
 
     @property
     def n_heads(self) -> int:
@@ -219,10 +219,30 @@ def _time_mix_out(tp, cfg: RWKVConfig, o, g, b, s):
     return (o * g) @ tp["wo"]
 
 
+def _last_valid(t: jax.Array, valid: jax.Array, fallback: jax.Array
+                ) -> jax.Array:
+    """Gather ``t (B, S, d)`` at each row's last valid position; rows with
+    no valid token keep ``fallback (B, d)`` (the incoming carry)."""
+    s = t.shape[1]
+    last = jnp.max(jnp.where(valid, jnp.arange(s)[None, :], -1), axis=1)
+    picked = jnp.take_along_axis(
+        t, jnp.clip(last, 0)[:, None, None], axis=1)[:, 0]
+    return jnp.where((last >= 0)[:, None], picked, fallback.astype(t.dtype))
+
+
 def rwkv_block_apply(params: PyTree, cfg: RWKVConfig, x: jax.Array,
-                     state: PyTree | None = None
+                     state: PyTree | None = None,
+                     valid: jax.Array | None = None
                      ) -> tuple[jax.Array, PyTree]:
-    """Training/prefill: ``x (B, S, d)`` -> (y, final recurrent state)."""
+    """Training/prefill: ``x (B, S, d)`` -> (y, final recurrent state).
+
+    ``valid (B, S)`` bool marks live positions for ragged right-padded
+    chunks (the serving prefill): pad positions become identity state
+    updates (``k``/``logw`` zeroed => decay 1, rank-1 update 0) and the
+    token-shift carries come from each row's LAST VALID position, so the
+    final state equals a per-row unpadded run.  Outputs at pad positions
+    are garbage and must be ignored by the caller.
+    """
     b, s, d = x.shape
     if state is None:
         state = init_rwkv_state(cfg, b)
@@ -232,12 +252,23 @@ def rwkv_block_apply(params: PyTree, cfg: RWKVConfig, x: jax.Array,
     xn = L.rms_norm(x, params["ln1"])
     mixed = _ddlerp(tp, xn, _shift(xn, state["shift_att"]))
     r, k, v, logw, g = _rkvwg(tp, mixed, cfg.n_heads, cfg.head_dim)
-    if cfg.impl == "chunked" and s > 1:
-        o, wkv = time_mix_chunked(r, k, v, logw, tp["u"].astype(jnp.float32),
-                                  state["wkv"], cfg.chunk)
+    if valid is not None:
+        vm = valid[:, :, None, None]
+        k = jnp.where(vm, k, jnp.zeros((), k.dtype))
+        logw = jnp.where(vm, logw, jnp.zeros((), logw.dtype))
+    u = tp["u"].astype(jnp.float32)
+    if cfg.impl == "pallas" and s > 1:
+        from repro.kernels.recurrent_scan import ops as rs_ops
+
+        # bf16 tiles only when the model itself runs bf16 activations;
+        # fp32 archs keep fp32 compute (oracle-tight)
+        cd = "bf16" if x.dtype == jnp.bfloat16 else "fp32"
+        o, wkv = rs_ops.wkv_chunked(r, k, v, logw, u, state["wkv"],
+                                    chunk=cfg.chunk, compute_dtype=cd)
+    elif cfg.impl == "chunked" and s > 1:
+        o, wkv = time_mix_chunked(r, k, v, logw, u, state["wkv"], cfg.chunk)
     else:
-        o, wkv = time_mix_ref(r, k, v, logw, tp["u"].astype(jnp.float32),
-                              state["wkv"])
+        o, wkv = time_mix_ref(r, k, v, logw, u, state["wkv"])
     o = o.astype(x.dtype)
     x = x + _time_mix_out(tp, cfg, o, g, b, s).astype(x.dtype)
 
@@ -250,8 +281,14 @@ def rwkv_block_apply(params: PyTree, cfg: RWKVConfig, x: jax.Array,
     out = (kk @ cp["wv"]) * jax.nn.sigmoid(xr @ cp["wr"])
     x = x + out.astype(x.dtype)
 
-    new_state = {"wkv": wkv, "shift_att": xn[:, -1, :],
-                 "shift_ffn": xn2[:, -1, :]}
+    if valid is None:
+        new_state = {"wkv": wkv, "shift_att": xn[:, -1, :],
+                     "shift_ffn": xn2[:, -1, :]}
+    else:
+        new_state = {"wkv": wkv,
+                     "shift_att": _last_valid(xn, valid, state["shift_att"]),
+                     "shift_ffn": _last_valid(xn2, valid,
+                                              state["shift_ffn"])}
     return x, new_state
 
 

@@ -36,7 +36,8 @@ PyTree = Any
 ShardFn = Callable[[jax.Array, str], jax.Array]
 
 __all__ = ["init", "forward", "loss_fn", "init_decode_state", "decode_step",
-           "attn_config", "rwkv_config", "rglru_config"]
+           "decode_hidden", "prefill_chunk", "attn_config", "rwkv_config",
+           "rglru_config"]
 
 
 def _dt(name: str):
@@ -62,12 +63,15 @@ def attn_config(cfg: ArchConfig, hybrid_local: bool = False) -> A.AttnConfig:
 
 
 def rwkv_config(cfg: ArchConfig) -> R.RWKVConfig:
+    impl = cfg.rec_impl or "chunked"
     return R.RWKVConfig(d_model=cfg.d_model, d_ff=cfg.d_ff,
-                        head_dim=cfg.rwkv_head_dim, chunk=cfg.rwkv_chunk)
+                        head_dim=cfg.rwkv_head_dim, chunk=cfg.rwkv_chunk,
+                        impl=impl)
 
 
 def rglru_config(cfg: ArchConfig) -> G.RGLRUConfig:
-    return G.RGLRUConfig(d_model=cfg.d_model, d_rnn=cfg.d_rnn)
+    impl = "pallas" if cfg.rec_impl == "pallas" else "scan"
+    return G.RGLRUConfig(d_model=cfg.d_model, d_rnn=cfg.d_rnn, impl=impl)
 
 
 def moe_config(cfg: ArchConfig) -> M.MoEConfig:
@@ -185,6 +189,42 @@ def _block_step(cfg: ArchConfig, kind: str, params: PyTree, h: jax.Array,
     raise ValueError(kind)
 
 
+def _block_chunk(cfg: ArchConfig, kind: str, params: PyTree, h: jax.Array,
+                 state: PyTree, start: jax.Array, valid: jax.Array,
+                 shard: ShardFn = _id_shard) -> tuple[jax.Array, PyTree]:
+    """Chunked teacher-forced prefill block: ``h (B, C, d)`` against live
+    decode state.  ``start`` = absolute position of the chunk's first
+    token (scalar — prefill chunks advance uniformly), ``valid (B, C)``
+    masks each row's live positions so recurrent state updates stay exact
+    under right padding (attention needs no mask: pad writes land past a
+    row's true length and are overwritten before they become visible).
+    """
+    if kind == "attn":
+        hybrid_local = len(cfg.block_pattern) > 1
+        acfg = attn_config(cfg, hybrid_local)
+        a, new_cache = A.decode_chunk(params["attn"], acfg,
+                                      L.rms_norm(h, params["ln1"]),
+                                      state, start, shard)
+        h = h + a
+        hn = L.rms_norm(h, params["ln2"])
+        if cfg.n_experts:
+            f, _ = M.moe_apply(params["ffn"], moe_config(cfg), hn)
+        else:
+            f = L.mlp_apply(params["ffn"], hn, cfg.mlp_variant)
+        return h + f, new_cache
+    if kind == "rec":
+        r, new_state = G.rglru_block_apply(params["rec"], rglru_config(cfg),
+                                           L.rms_norm(h, params["ln1"]),
+                                           state, valid)
+        h = h + r
+        f = L.mlp_apply(params["ffn"], L.rms_norm(h, params["ln2"]),
+                        cfg.mlp_variant)
+        return h + f, new_state
+    if kind == "rwkv":
+        return R.rwkv_block_apply(params, rwkv_config(cfg), h, state, valid)
+    raise ValueError(kind)
+
+
 # ---------------------------------------------------------------------------
 # Full-model init
 # ---------------------------------------------------------------------------
@@ -298,10 +338,15 @@ def loss_fn(cfg: ArchConfig, params: PyTree, batch: dict,
 # Decode
 # ---------------------------------------------------------------------------
 
-def init_decode_state(cfg: ArchConfig, batch: int, max_len: int) -> PyTree:
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                      per_slot: bool = False) -> PyTree:
+    """``per_slot=True`` keeps a PER-ROW ``length (batch,)`` so every row
+    (serving slot) decodes at its own depth — the slot-scheduler layout.
+    The default scalar length is the uniform-batch decode path."""
     dtype = _dt(cfg.act_dtype)
     pat = cfg.block_pattern
-    state: dict = {"length": jnp.zeros((), jnp.int32)}
+    state: dict = {"length": jnp.zeros((batch,) if per_slot else (),
+                                       jnp.int32)}
     if cfg.scan_layers and cfg.n_groups > 0:
         groups = [
             {str(j): _block_state_init(cfg, kind, batch, max_len, dtype)
@@ -319,10 +364,14 @@ def init_decode_state(cfg: ArchConfig, batch: int, max_len: int) -> PyTree:
     return state
 
 
-def decode_step(cfg: ArchConfig, params: PyTree, tokens: jax.Array,
-                state: PyTree, shard: ShardFn = _id_shard
-                ) -> tuple[jax.Array, PyTree]:
-    """One decode step: ``tokens (B, 1)`` -> (logits (B, 1, V), new state)."""
+def decode_hidden(cfg: ArchConfig, params: PyTree, tokens: jax.Array,
+                  state: PyTree, shard: ShardFn = _id_shard
+                  ) -> tuple[jax.Array, PyTree]:
+    """One decode step up to the FINAL NORM: ``tokens (B, 1)`` ->
+    (normed hidden (B, 1, d), new state) — the head is left to the
+    caller so serving can swap per-cluster heads/adapters over the
+    shared trunk.  ``state["length"]`` may be scalar or per-row ``(B,)``
+    (the slot-scheduler layout)."""
     h = jnp.take(params["embed"], tokens, axis=0).astype(_dt(cfg.act_dtype))
     h = shard(h, "activation")
     length = state["length"]
@@ -355,6 +404,64 @@ def decode_step(cfg: ArchConfig, params: PyTree, tokens: jax.Array,
                                state["rest"][str(j)], length, shard)
         new_rest[str(j)] = s_new
     new_state["rest"] = new_rest
-    h = L.rms_norm(h, params["final_norm"])
+    return L.rms_norm(h, params["final_norm"]), new_state
+
+
+def decode_step(cfg: ArchConfig, params: PyTree, tokens: jax.Array,
+                state: PyTree, shard: ShardFn = _id_shard
+                ) -> tuple[jax.Array, PyTree]:
+    """One decode step: ``tokens (B, 1)`` -> (logits (B, 1, V), new state)."""
+    h, new_state = decode_hidden(cfg, params, tokens, state, shard)
     logits = shard(h @ params["head"], "logits")
     return logits, new_state
+
+
+def prefill_chunk(cfg: ArchConfig, params: PyTree, tokens: jax.Array,
+                  state: PyTree, start: jax.Array, valid: jax.Array,
+                  shard: ShardFn = _id_shard) -> tuple[jax.Array, PyTree]:
+    """Teacher-forced prefill of a C-token chunk in ONE dispatchable step:
+    ``tokens (B, C)`` right-padded, ``start`` = the chunk's absolute base
+    position (scalar), ``valid (B, C)`` = per-row liveness.  Returns the
+    PRE-NORM hidden ``(B, C, d)`` (the caller gathers each row's last
+    valid position and applies final_norm + head once) and the advanced
+    state (``length`` grows by each row's valid count, so it lands on the
+    true prompt length after the last chunk).
+
+    Scanning this over ``prompt_len / C`` chunks replaces the old
+    per-token prefill loop: dispatches drop O(prompt_len) ->
+    O(prompt_len / C).  Requires a per-slot state (vector ``length``).
+    """
+    h = jnp.take(params["embed"], tokens, axis=0).astype(_dt(cfg.act_dtype))
+    h = shard(h, "activation")
+    pat = cfg.block_pattern
+    start = jnp.asarray(start, jnp.int32)
+    counts = jnp.sum(valid.astype(jnp.int32), axis=1)
+    new_state: dict = {"length": state["length"] + counts}
+
+    def group_body(h, inp):
+        gp, gs = inp
+        new_gs = {}
+        for j, kind in enumerate(pat):
+            h, s_new = _block_chunk(cfg, kind, gp[str(j)], h, gs[str(j)],
+                                    start, valid, shard)
+            new_gs[str(j)] = s_new
+        return h, new_gs
+
+    if cfg.scan_layers and cfg.n_groups > 0:
+        h, gs = jax.lax.scan(group_body, h,
+                             (params["groups"], state["groups"]))
+        new_state["groups"] = gs
+    elif "groups_unrolled" in state:
+        new_unrolled = []
+        for gp, gs in zip(params["groups_unrolled"],
+                          state["groups_unrolled"]):
+            h, gs_new = group_body(h, (gp, gs))
+            new_unrolled.append(gs_new)
+        new_state["groups_unrolled"] = new_unrolled
+    new_rest = {}
+    for j, kind in enumerate(cfg.rest_kinds):
+        h, s_new = _block_chunk(cfg, kind, params["rest"][str(j)], h,
+                                state["rest"][str(j)], start, valid, shard)
+        new_rest[str(j)] = s_new
+    new_state["rest"] = new_rest
+    return h, new_state

@@ -430,12 +430,16 @@ class TestTuning:
     def test_heuristics_cover_all_kernels(self):
         dims = {"gram": dict(n=300, d=70), "gram_project": dict(n=300, k=70),
                 "featurize_gram": dict(n=300), "eigproject": dict(d=70, k=9),
-                "linkage": dict(n=256), "assign": dict(b=64, d2=1024)}
+                "linkage": dict(n=256), "assign": dict(b=64, d2=1024),
+                "recurrent_scan": dict(s=96, d=70)}
         for kernel in tuning.KERNELS:
             blocks = tuning.heuristic_blocks(kernel, **dims[kernel])
             assert blocks, kernel
             for k, val in blocks.items():
                 if isinstance(val, bool):
+                    continue
+                if k == "chunk":   # time tile, not a lane axis
+                    assert val >= 1, (kernel, k, val)
                     continue
                 assert val >= 1 and val % 128 == 0, (kernel, k, val)
 
@@ -614,3 +618,103 @@ class TestDoubleBuffer:
         np.testing.assert_allclose(np.asarray(db),
                                    np.asarray(featurize_gram_ref(x, w)),
                                    rtol=1e-3, atol=1e-3)
+
+
+class TestRecurrentScanKernel:
+    """The serving recurrences: chunked wkv (rwkv6 time-mix) and the
+    rglru linear scan, vs their sequential fp32 oracles."""
+
+    @staticmethod
+    def _wkv_inputs(rng, b, h, s, hd, scale=1.0):
+        f = jnp.float32
+        r = jnp.asarray(rng.standard_normal((b, s, h, hd)) * scale, f)
+        k = jnp.asarray(rng.standard_normal((b, s, h, hd)) * scale, f)
+        v = jnp.asarray(rng.standard_normal((b, s, h, hd)) * scale, f)
+        logw = -jnp.asarray(np.exp(rng.standard_normal((b, s, h, hd))), f)
+        u = jnp.asarray(rng.standard_normal((h, hd)) * scale, f)
+        st = jnp.asarray(rng.standard_normal((b, h, hd, hd)) * scale, f)
+        return r, k, v, logw, u, st
+
+    @pytest.mark.parametrize("b,h,s,hd,chunk", [
+        (1, 1, 32, 16, 8),      # lane padding (16 -> 128)
+        (2, 2, 64, 64, 16),
+        (2, 1, 48, 32, 16),     # s not divisible by chunk
+        (1, 2, 16, 64, 64),     # chunk > s
+    ])
+    def test_wkv_fp32_vs_oracle(self, b, h, s, hd, chunk):
+        from repro.kernels.recurrent_scan import ops as rs_ops
+        from repro.kernels.recurrent_scan.ref import wkv_ref
+
+        rng = np.random.default_rng(b * 100 + s + hd)
+        r, k, v, logw, u, st = self._wkv_inputs(rng, b, h, s, hd)
+        out, new_st = rs_ops.wkv_chunked(r, k, v, logw, u, st, chunk=chunk,
+                                         compute_dtype="fp32",
+                                         interpret=True)
+        want, want_st = wkv_ref(r, k, v, logw, u, st)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(new_st), np.asarray(want_st),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_wkv_matches_time_mix_paths(self):
+        """Kernel, chunked-jnp, and sequential time-mix agree on the same
+        inputs — the three rec_impl serving paths are interchangeable."""
+        from repro.kernels.recurrent_scan import ops as rs_ops
+        from repro.models import rwkv6
+
+        rng = np.random.default_rng(9)
+        r, k, v, logw, u, st = self._wkv_inputs(rng, 2, 2, 64, 32)
+        o_ker, s_ker = rs_ops.wkv_chunked(r, k, v, logw, u, st, chunk=16,
+                                          compute_dtype="fp32",
+                                          interpret=True)
+        o_ref, s_ref = rwkv6.time_mix_ref(r, k, v, logw, u, st)
+        o_chk, s_chk = rwkv6.time_mix_chunked(r, k, v, logw, u, st,
+                                              chunk=32)
+        for got, want in ((o_ker, o_ref), (s_ker, s_ref),
+                          (o_ker, o_chk), (s_ker, s_chk)):
+            np.testing.assert_allclose(np.asarray(got, np.float32),
+                                       np.asarray(want, np.float32),
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_wkv_bf16_parity(self):
+        """bf16 compute / fp32 accumulate stays within bf16 resolution of
+        the oracle at serving-scale (~0.1) activations."""
+        from repro.kernels.recurrent_scan import ops as rs_ops
+        from repro.kernels.recurrent_scan.ref import wkv_ref
+
+        rng = np.random.default_rng(11)
+        r, k, v, logw, u, st = self._wkv_inputs(rng, 2, 2, 64, 32,
+                                                scale=0.1)
+        out, _ = rs_ops.wkv_chunked(r, k, v, logw, u, st, chunk=16,
+                                    compute_dtype="bf16", interpret=True)
+        want, _ = wkv_ref(r, k, v, logw, u, st)
+        assert float(np.abs(np.asarray(out, np.float32)
+                            - np.asarray(want)).max()) <= 1e-3
+
+    @pytest.mark.parametrize("b,s,d,chunk,block_d", [
+        (1, 32, 64, 8, 64),
+        (2, 64, 160, 16, 128),   # d not lane-aligned, block smaller than d
+        (2, 24, 32, 32, 256),    # chunk > s, block_d > d
+    ])
+    def test_linear_scan_vs_oracle(self, b, s, d, chunk, block_d):
+        from repro.kernels.recurrent_scan import ops as rs_ops
+        from repro.kernels.recurrent_scan.ref import linear_scan_ref
+
+        rng = np.random.default_rng(b * 31 + s + d)
+        f = jnp.float32
+        log_a = -jnp.asarray(np.exp(rng.standard_normal((b, s, d)) - 1), f)
+        x = jnp.asarray(rng.standard_normal((b, s, d)), f)
+        h0 = jnp.asarray(rng.standard_normal((b, d)), f)
+        h, h_last = rs_ops.linear_scan(log_a, x, h0, chunk=chunk,
+                                       block_d=block_d, interpret=True)
+        want_h, want_last = linear_scan_ref(log_a, x, h0)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(want_h),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(h_last),
+                                   np.asarray(want_last),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_tuning_registered(self):
+        blocks = tuning.heuristic_blocks("recurrent_scan", s=256, d=512)
+        assert set(blocks) == {"chunk", "block_d"}
+        assert blocks["chunk"] >= 8 and blocks["block_d"] >= 128

@@ -1,0 +1,248 @@
+"""Continuous-batching serving engine: token identity vs sequential
+decode, slot reuse, mid-stream admits, no-retrace, stats accounting, and
+membership routing."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core.membership_engine import MembershipConfig, MembershipEngine
+from repro.launch.decode_loop import (ClusterHeads, DecodeStats, Request,
+                                      ServeConfig, ServeEngine,
+                                      cluster_logits, cluster_logits_fn,
+                                      greedy_decode, route_requests,
+                                      token_signature)
+from repro.models.registry import get_model
+
+
+def tiny_arch(kind: str, **kw) -> ArchConfig:
+    base = dict(name=f"tiny_{kind}", arch_type="dense", d_model=64,
+                n_layers=2, n_heads=4, n_kv_heads=2, d_ff=128, vocab=97,
+                head_dim=16, block_pattern=(kind,), param_dtype="float32",
+                act_dtype="float32", scan_layers=False)
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+def build(cfg, n_clusters=3):
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    heads = ClusterHeads.init(jax.random.PRNGKey(1), params["head"],
+                              n_clusters)
+    return m, params, heads
+
+
+def ragged_requests(rng, n, vocab, n_clusters, max_prompt=16, max_gen=8,
+                    staggered=False):
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(3, max_prompt + 1))
+        gen = int(rng.integers(1, max_gen + 1))
+        arrive = int(rng.integers(1, 6)) if staggered and i >= n // 2 else 0
+        reqs.append(Request(
+            tokens=rng.integers(0, vocab, plen).astype(np.int32),
+            gen=gen, cluster=i % n_clusters, arrive_round=arrive))
+    return reqs
+
+
+def assert_token_identical(m, params, heads, reqs, stats):
+    for i, r in enumerate(reqs):
+        base = greedy_decode(m, params, jnp.asarray(r.tokens)[None, :],
+                             r.gen,
+                             logits_fn=cluster_logits_fn(heads, r.cluster))
+        np.testing.assert_array_equal(np.asarray(base.tokens[0]),
+                                      stats.results[i].tokens,
+                                      err_msg=f"request {i} diverged")
+
+
+SCFG = ServeConfig(slots=4, max_len=32, prefill_chunk=4, max_prompt=16,
+                   wave=3, max_gen=8)
+
+
+class TestServeEngine:
+    @pytest.mark.parametrize("kind,kw", [
+        ("attn", {}),
+        ("rwkv", {"rec_impl": "scan"}),
+        ("rec", {}),
+    ])
+    def test_token_identity_ragged_mix(self, kind, kw):
+        """8 ragged requests through 4 slots (slot reuse) must reproduce
+        per-request sequential greedy decode exactly."""
+        cfg = tiny_arch(kind, **kw)
+        m, params, heads = build(cfg)
+        rng = np.random.default_rng(7)
+        reqs = ragged_requests(rng, 8, cfg.vocab, 3)
+        engine = ServeEngine(m, params, heads, SCFG)
+        stats = engine.serve(reqs)
+        assert_token_identical(m, params, heads, reqs, stats)
+        assert stats.slot_utilization > 0
+        for i, r in enumerate(reqs):
+            assert len(stats.results[i].tokens) == r.gen
+
+    def test_mid_stream_admits_and_no_retrace(self):
+        """Staggered arrivals join mid-decode; a second serve with a
+        different ragged mix reuses every traced program."""
+        cfg = tiny_arch("attn")
+        m, params, heads = build(cfg)
+        rng = np.random.default_rng(11)
+        reqs = ragged_requests(rng, 10, cfg.vocab, 3, staggered=True)
+        engine = ServeEngine(m, params, heads, SCFG)
+        stats = engine.serve(reqs)
+        assert_token_identical(m, params, heads, reqs, stats)
+        # late arrivals must not have been admitted before their round
+        assert stats.prefill_dispatches >= 2
+        traces = dict(engine.traces)
+        assert all(v == 1 for v in traces.values()), traces
+        reqs2 = ragged_requests(rng, 6, cfg.vocab, 3, staggered=True)
+        stats2 = engine.serve(reqs2)
+        assert engine.traces == traces, (
+            f"retraced across serve calls: {traces} -> {engine.traces}")
+        assert_token_identical(m, params, heads, reqs2, stats2)
+
+    def test_single_dispatch_wave_prefill(self):
+        """One host dispatch per admission wave regardless of prompt
+        lengths; the scan covers max_prompt/prefill_chunk chunks."""
+        cfg = tiny_arch("attn")
+        m, params, heads = build(cfg)
+        rng = np.random.default_rng(3)
+        reqs = ragged_requests(rng, 3, cfg.vocab, 3)  # one wave
+        engine = ServeEngine(m, params, heads, SCFG)
+        stats = engine.serve(reqs)
+        assert stats.prefill_dispatches == 1
+        assert stats.prefill_scan_steps == SCFG.max_prompt // \
+            SCFG.prefill_chunk
+
+    def test_gen_one_never_occupies_a_slot(self):
+        cfg = tiny_arch("attn")
+        m, params, heads = build(cfg)
+        reqs = [Request(tokens=np.arange(5, dtype=np.int32) % cfg.vocab,
+                        gen=1, cluster=c) for c in range(3)]
+        engine = ServeEngine(m, params, heads, SCFG)
+        stats = engine.serve(reqs)
+        assert stats.decode_dispatches == 0
+        assert_token_identical(m, params, heads, reqs, stats)
+
+    def test_request_validation(self):
+        cfg = tiny_arch("attn")
+        m, params, heads = build(cfg)
+        engine = ServeEngine(m, params, heads, SCFG)
+        bad = [
+            Request(tokens=np.zeros(17, np.int32), gen=2),      # > max_prompt
+            Request(tokens=np.zeros(4, np.int32), gen=9),       # > max_gen
+            Request(tokens=np.zeros(4, np.int32), gen=2, cluster=5),
+        ]
+        for r in bad:
+            with pytest.raises(ValueError):
+                engine.serve([r])
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            ServeConfig(prefill_chunk=5, max_prompt=16).validate()
+        with pytest.raises(ValueError):
+            ServeConfig(max_prompt=64, max_gen=64, max_len=100).validate()
+
+    def test_encdec_and_windowed_rejected(self):
+        cfg = tiny_arch("attn", attn_window=8)
+        m, params, heads = build(cfg)
+        with pytest.raises(ValueError, match="full KV"):
+            ServeEngine(m, params, heads, SCFG)
+
+
+class TestDecodeStats:
+    def test_accounting(self):
+        """tok_per_s divides the gen-1 decode-phase tokens by the decode
+        timer (the first token comes out of prefill and is billed to
+        ttft), not batch*gen / decode_s."""
+        s = DecodeStats(tokens=jnp.zeros((4, 9), jnp.int32), prompt_len=7,
+                        prefill_s=1.0, ttft_s=1.5, decode_s=2.0,
+                        prefill_dispatches=7)
+        assert s.tok_per_s == pytest.approx(4 * 8 / 2.0)
+        assert s.total_tok_per_s == pytest.approx(4 * 9 / 3.5)
+
+    def test_greedy_decode_counts_and_fields(self):
+        cfg = tiny_arch("attn")
+        m, params, _ = build(cfg)
+        prompts = jnp.asarray(
+            np.random.default_rng(0).integers(0, cfg.vocab, (2, 6)),
+            jnp.int32)
+        stats = greedy_decode(m, params, prompts, 3)
+        assert stats.tokens.shape == (2, 3)
+        assert stats.prefill_dispatches == 6
+        assert stats.ttft_s >= stats.prefill_s > 0
+        assert stats.decode_s > 0
+
+
+class TestClusterHeads:
+    def test_distinct_heads_route_distinctly(self):
+        cfg = tiny_arch("attn")
+        m, params, heads = build(cfg)
+        hn = jnp.asarray(
+            np.random.default_rng(1).standard_normal((2, cfg.d_model)),
+            jnp.float32)
+        l0 = cluster_logits(heads, hn, jnp.zeros(2, jnp.int32))
+        l1 = cluster_logits(heads, hn, jnp.ones(2, jnp.int32))
+        assert not np.allclose(np.asarray(l0), np.asarray(l1))
+        mixed = cluster_logits(heads, hn, jnp.asarray([0, 1], jnp.int32))
+        np.testing.assert_allclose(np.asarray(mixed[0]), np.asarray(l0[0]),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(mixed[1]), np.asarray(l1[1]),
+                                   rtol=1e-6)
+
+
+class TestRouting:
+    def test_route_requests_recovers_seeded_clusters(self):
+        """Requests drawn from two distinct token distributions route to
+        the clusters their signatures seeded."""
+        from repro.data.tokens import TokenTaskSpec, sample_tokens
+
+        d, k = 32, 2
+        specs = [TokenTaskSpec(vocab=64, seed=s) for s in (0, 1)]
+        streams, labels = [], []
+        for t, spec in enumerate(specs):
+            for j in range(3):
+                streams.append(sample_tokens(spec, 600, seed=10 * t + j))
+                labels.append(t)
+        sigs = [token_signature(s, d=d, k=k, vocab=64) for s in streams]
+        lam = np.stack([s[0] for s in sigs])
+        v = np.stack([s[1] for s in sigs])
+        eng = MembershipEngine(MembershipConfig(backend="numpy"))
+        eng.seed(lam, v, np.asarray(labels), n_clusters=2)
+        got = route_requests(eng, streams, d=d, k=k, vocab=64)
+        assert got.tolist() == labels
+
+    def test_unassigned_falls_back_to_zero(self):
+        class Stub:
+            def assign(self, lam, v):
+                return dataclasses.make_dataclass(
+                    "R", ["labels", "affinity", "margin"])(
+                        np.asarray([-1, 1]), None, None)
+
+        got = route_requests(Stub(), [np.arange(40), np.arange(40)])
+        assert got.tolist() == [0, 1]
+
+
+class TestRecImplParity:
+    """The three rec_impl serving paths are interchangeable at the model
+    level (fp32 archs keep fp32 kernel compute)."""
+
+    @pytest.mark.parametrize("kind", ["rwkv", "rec"])
+    def test_pallas_matches_scan_forward_and_prefill(self, kind):
+        outs = {}
+        for impl in ("scan", "pallas"):
+            cfg = tiny_arch(kind, rec_impl=impl)
+            m = get_model(cfg)
+            params = m.init(jax.random.PRNGKey(0))
+            toks = jnp.asarray(
+                np.random.default_rng(0).integers(0, cfg.vocab, (2, 16)),
+                jnp.int32)
+            logits, _ = m.forward(params, {"tokens": toks})
+            st = m.init_decode_state(2, 24, per_slot=True)
+            valid = jnp.asarray([[True] * 8, [True] * 5 + [False] * 3])
+            h, st = m.prefill_chunk(params, toks[:, :8], st, 0, valid)
+            outs[impl] = (np.asarray(logits), np.asarray(h[:, :5]),
+                          np.asarray(st["length"]))
+        for got, want in zip(outs["pallas"], outs["scan"]):
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
