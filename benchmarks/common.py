@@ -4,13 +4,13 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import time
 from pathlib import Path
 from typing import Callable, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import clustering as clu
 from repro.core import oneshot
 from repro.core.similarity import SimilarityConfig
@@ -24,10 +24,10 @@ from repro.fed import trainer as ftrainer
 def time_us(fn: Callable, n_iter: int = 5, warmup: int = 1) -> float:
     for _ in range(warmup):
         fn()
-    t0 = time.perf_counter()
+    t0 = obs.now()
     for _ in range(n_iter):
         fn()
-    return (time.perf_counter() - t0) / n_iter * 1e6
+    return (obs.now() - t0) / n_iter * 1e6
 
 
 def row(name: str, us: float, **derived) -> str:
@@ -54,10 +54,11 @@ def record_result(json_path: str | Path, payload: dict) -> None:
 
     The single JSON-writing path shared by every recording benchmark
     (creates parent dirs, pretty-prints, trailing newline, stamps the
-    jax/device environment), so recorded artifacts stay diff-friendly
-    and uniform.
+    jax/device environment plus the telemetry counters active during
+    the run), so recorded artifacts stay diff-friendly and uniform.
     """
-    payload = {**payload, "env": environment_stamp()}
+    payload = {**payload, "env": environment_stamp(),
+               "metrics": obs.stamp()}
     p = Path(json_path)
     p.parent.mkdir(parents=True, exist_ok=True)
     p.write_text(json.dumps(payload, indent=2) + "\n")

@@ -16,18 +16,19 @@ import argparse
 import os
 import subprocess
 import sys
-import time
+
+from repro import obs
 
 SUITES = ["table1", "table2", "fig2", "fig3", "fig4", "comm", "ifca",
           "robustness", "kernels", "clustering", "signature", "pipeline",
-          "membership", "scale", "roofline", "serve"]
+          "membership", "scale", "roofline", "serve", "obs"]
 
 
 def run_suite(name: str, seeds: int) -> list[str]:
     from benchmarks import (bench_clustering, bench_comm_cost,
                             bench_fig2_cifar, bench_fig3_fmnist,
                             bench_fig4_eigvectors, bench_ifca,
-                            bench_kernels, bench_membership,
+                            bench_kernels, bench_membership, bench_obs,
                             bench_pipeline, bench_robustness,
                             bench_roofline, bench_scale, bench_serve,
                             bench_signature, bench_table1_similarity,
@@ -61,6 +62,8 @@ def run_suite(name: str, seeds: int) -> list[str]:
         # likewise: the full acceptance run (batch-8 ragged mix, >= 3x
         # continuous-vs-static assert) runs standalone
         "serve": lambda: bench_serve.run(quick=True),
+        # telemetry overhead guard: enabled <= 5%, disabled <= 0.5%
+        "obs": lambda: bench_obs.run(quick=True),
     }
     return fns[name]()
 
@@ -81,7 +84,7 @@ def main() -> None:
     selected = [s for s in SUITES
                 if args.only is None or s.startswith(args.only)]
     for name in selected:
-        t0 = time.time()
+        t0 = obs.now()
         res = subprocess.run(
             [sys.executable, "-m", "benchmarks.run",
              "--suite-child", name, "--seeds", str(args.seeds)],
@@ -93,7 +96,7 @@ def main() -> None:
             print(f"{name}_ERROR,0.0,error={tail}", flush=True)
         else:
             print(out, flush=True)
-        print(f"# suite {name} took {time.time() - t0:.1f}s",
+        print(f"# suite {name} took {obs.now() - t0:.1f}s",
               file=sys.stderr)
 
 

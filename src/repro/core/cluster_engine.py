@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import clustering as clu
 from repro.kernels.linkage.ref import LINKAGES, linkage_step_ref
 
@@ -303,6 +304,14 @@ class ClusterEngine:
 
     def hac(self, similarity) -> clu.Dendrogram | DeviceDendrogram:
         """Agglomerative clustering -> dendrogram (host or device form)."""
+        with obs.span("cluster.hac", backend=self.cfg.backend,
+                      linkage=self.cfg.linkage):
+            dend = self._hac(similarity)
+        if obs.enabled():
+            obs.count("cluster.hac_runs")
+        return dend
+
+    def _hac(self, similarity) -> clu.Dendrogram | DeviceDendrogram:
         if self.cfg.backend == "numpy":
             return clu.hac(np.asarray(similarity), linkage=self.cfg.linkage)
         s, alive, n = self._prepare(similarity)
@@ -325,11 +334,13 @@ class ClusterEngine:
 
     def cut(self, dend, n_clusters: int):
         """Dendrogram -> labels; device dendrograms cut on-device."""
-        if isinstance(dend, clu.Dendrogram):
-            return clu.cut(dend, n_clusters)
-        self._check_n_clusters(n_clusters, dend.n_leaves)
-        return _cut_device(dend.merge_rows, dend.heights,
-                           n_leaves=dend.n_leaves, n_clusters=n_clusters)
+        with obs.span("cluster.cut", n_clusters=n_clusters) as sp:
+            if isinstance(dend, clu.Dendrogram):
+                return clu.cut(dend, n_clusters)
+            self._check_n_clusters(n_clusters, dend.n_leaves)
+            return sp.sync(_cut_device(dend.merge_rows, dend.heights,
+                                       n_leaves=dend.n_leaves,
+                                       n_clusters=n_clusters))
 
     def labels(self, similarity, n_clusters: int):
         """HAC + cut.  numpy backend -> ``np.ndarray``; device backends ->
@@ -348,11 +359,13 @@ class ClusterEngine:
         seed / Generator on the host path, an int seed or PRNG key on the
         device path.
         """
-        if self.cfg.backend == "numpy":
-            return clu.spectral_clusters(np.asarray(similarity), n_clusters,
-                                         rng=rng)
-        s = jnp.asarray(similarity, jnp.float32)
-        self._check_n_clusters(n_clusters, self._check_square(s))
-        key = rng if isinstance(rng, jax.Array) else jax.random.PRNGKey(
-            int(rng))
-        return _spectral_device(s, key, n_clusters=n_clusters)
+        with obs.span("cluster.spectral", backend=self.cfg.backend,
+                      n_clusters=n_clusters) as sp:
+            if self.cfg.backend == "numpy":
+                return clu.spectral_clusters(np.asarray(similarity),
+                                             n_clusters, rng=rng)
+            s = jnp.asarray(similarity, jnp.float32)
+            self._check_n_clusters(n_clusters, self._check_square(s))
+            key = rng if isinstance(rng, jax.Array) else jax.random.PRNGKey(
+                int(rng))
+            return sp.sync(_spectral_device(s, key, n_clusters=n_clusters))

@@ -56,6 +56,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.core import similarity as sim
 from repro.core import signature_engine as sig
 
@@ -332,8 +333,9 @@ class ProtocolEngine:
         return self.relevance_and_similarity(features, n_valid)[1]
 
     def run(self, features, n_valid=None) -> ProtocolResult:
-        feats, nv = self.prepare(features, n_valid)
-        r, big_r, lam, v = self._dispatch(feats, nv)
+        with obs.span("protocol.run", backend=self.cfg.backend):
+            feats, nv = self.prepare(features, n_valid)
+            r, big_r, lam, v = self._dispatch(feats, nv)
         n_users, _, d = feats.shape
         return ProtocolResult(relevance=r, similarity=big_r,
                               n_users=n_users, d=d, top_k=self._top_k(d),
@@ -394,15 +396,18 @@ class ProtocolEngine:
         n_users, _, m = raw.shape
         d_out = engine.out_dim(m)
         top_k = self._top_k(d_out)
-        if self.cfg.backend == "shard_map":
-            r, big_r, resid, lam, v = self._run_raw_shard_map(
-                engine, raw, nv, top_k, full)
-        else:
-            grams = engine.accumulate_grams(raw, nv, assume_full=full)
-            r, big_r, resid, lam, v = _raw_finish(
-                grams, top_k, self.cfg.eig_floor, self.impl,
-                engine.cfg.eig, engine.cfg.subspace_iters,
-                engine.cfg.oversample, engine.cfg.check)
+        with obs.span("protocol.run_raw", backend=self.cfg.backend,
+                      n_users=n_users) as sp:
+            if self.cfg.backend == "shard_map":
+                r, big_r, resid, lam, v = self._run_raw_shard_map(
+                    engine, raw, nv, top_k, full)
+            else:
+                grams = engine.accumulate_grams(raw, nv, assume_full=full)
+                r, big_r, resid, lam, v = _raw_finish(
+                    grams, top_k, self.cfg.eig_floor, self.impl,
+                    engine.cfg.eig, engine.cfg.subspace_iters,
+                    engine.cfg.oversample, engine.cfg.check)
+            sp.sync((r, big_r, lam, v))
         if engine.cfg.check:
             engine.verify_convergence(resid)
         return ProtocolResult(relevance=r, similarity=big_r,
@@ -443,14 +448,26 @@ class ProtocolEngine:
     def _dispatch(self, feats: jax.Array, nv: jax.Array):
         """Backend dispatch on already-``prepare``d inputs ->
         ``(r, R, lam, v)``."""
-        if self.cfg.backend == "shard_map":
-            return self._run_shard_map(feats, nv)
-        if self.cfg.landmarks:
-            return self._run_landmarks(feats, nv)
-        if self.cfg.block_users:
-            return self._run_blockwise(feats, nv)
-        return _dense_protocol(feats, nv, self._top_k(feats.shape[-1]),
-                               self.cfg.eig_floor, self.impl)
+        mode = ("shard_map" if self.cfg.backend == "shard_map"
+                else "landmarks" if self.cfg.landmarks
+                else "blockwise" if self.cfg.block_users else "dense")
+        with obs.span("protocol.dispatch", mode=mode,
+                      backend=self.cfg.backend, impl=self.impl,
+                      n_users=feats.shape[0]) as sp:
+            if self.cfg.backend == "shard_map":
+                out = self._run_shard_map(feats, nv)
+            elif self.cfg.landmarks:
+                out = self._run_landmarks(feats, nv)
+            elif self.cfg.block_users:
+                out = self._run_blockwise(feats, nv)
+            else:
+                out = _dense_protocol(feats, nv,
+                                      self._top_k(feats.shape[-1]),
+                                      self.cfg.eig_floor, self.impl)
+            sp.sync(out)
+        if obs.enabled():
+            obs.count("protocol.dispatches", mode=mode)
+        return out
 
     # -- backends -----------------------------------------------------------
 

@@ -77,6 +77,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.core import similarity as sim
 from repro.core.cluster_engine import ClusterConfig, ClusterEngine
 from repro.core.engine import make_user_mesh
@@ -493,6 +494,10 @@ class MembershipEngine:
             lam=lam_t, v=v_t, labels=lab_t, valid=valid, protos=table,
             counts=counts, protos0=table, n_clusters=n_clusters,
             proto_scales=scales, proto0_scales=scales)
+        if obs.enabled():
+            obs.gauge("directory_bytes", self.state.directory_bytes)
+            obs.event("seed", n_members=n, n_clusters=n_clusters,
+                      capacity=cap, backend=self.cfg.backend)
         return self.state
 
     @property
@@ -573,6 +578,25 @@ class MembershipEngine:
         ``v (B, d, k)``.  One dispatch per wave on the device backends.
         """
         st = self._require_state()
+        t0 = obs.now()
+        with obs.span("membership.assign", backend=self.cfg.backend) as sp:
+            res = self._assign(st, v)
+            # labels alone gate the whole one-dispatch wave program, so
+            # blocking on them times the full device computation without
+            # paying three separate readiness walks
+            sp.sync(res.labels)
+        if obs.enabled():
+            obs.observe("assign_latency_us", (obs.now() - t0) * 1e6)
+            obs.count("membership.assign_waves")
+            # compare on the host: a jnp == here would be a full jax
+            # dispatch per wave, dwarfing the rest of the telemetry
+            labels_np = np.asarray(res.labels)
+            obs.event("assign_wave", n=int(labels_np.shape[0]),
+                      n_unassigned=int((labels_np == UNASSIGNED).sum()),
+                      backend=self.cfg.backend)
+        return res
+
+    def _assign(self, st: MembershipState, v) -> AssignResult:
         if self.on_device:
             labels, aff, margin = _assign_device(
                 jnp.asarray(v, jnp.float32), st.protos, st.counts,
@@ -660,6 +684,18 @@ class MembershipEngine:
         Resistant aggregators cannot down-/up-date order statistics in
         O(1), so they pay a windowed recompute over the live table
         instead.  Returns the occupied slot indices (for ``evict``)."""
+        with obs.span("membership.admit") as sp:
+            slots = self._admit(lam, v, labels)
+            sp.sync(self.state.protos)
+        if obs.enabled():
+            st = self.state
+            obs.count("membership.admits", len(slots))
+            obs.gauge("directory_bytes", st.directory_bytes)
+            obs.event("admit", n=len(slots), slots=slots,
+                      n_members=int(st.n_members))
+        return slots
+
+    def _admit(self, lam, v, labels) -> np.ndarray:
         st = self._require_state()
         lam = np.asarray(lam, np.float32)
         slots = self._free_slots(lam.shape[0])
@@ -705,6 +741,18 @@ class MembershipEngine:
     def evict(self, slots) -> None:
         """Masked removal of table slots (churn): free the rows and
         down-date the prototypes by the departing members' projectors."""
+        with obs.span("membership.evict") as sp:
+            self._evict(slots)
+            sp.sync(self.state.protos)
+        if obs.enabled():
+            st = self.state
+            obs.count("membership.evicts", len(np.asarray(slots)))
+            obs.gauge("directory_bytes", st.directory_bytes)
+            obs.event("evict", n=len(np.asarray(slots)),
+                      slots=np.asarray(slots),
+                      n_members=int(st.n_members))
+
+    def _evict(self, slots) -> None:
         st = self._require_state()
         slots = np.asarray(slots, np.int32)
         if len(np.unique(slots)) != len(slots):
@@ -783,13 +831,17 @@ class MembershipEngine:
         rel = shift / base
         stat = (np.median(rel) if self.cfg.drift_stat == "median"
                 else rel.max())
-        return {
+        stats = {
             "unassigned_frac": st.n_unassigned / n,
             "proto_shift": float(stat),
             "proto_shift_max": float(rel.max()),
             "n_members": st.n_members,
             "n_reclusters": st.n_reclusters,
         }
+        if obs.enabled():
+            obs.gauge("unassigned_frac", stats["unassigned_frac"])
+            obs.gauge("proto_shift", stats["proto_shift"])
+        return stats
 
     def should_recluster(self) -> bool:
         s = self.drift_stats()
@@ -803,8 +855,14 @@ class MembershipEngine:
         the numpy backend, device NN-chain otherwise.  New cut ids are
         greedily matched onto the previous labels for serving
         continuity.  Returns whether a re-cluster ran."""
-        if not force and not self.should_recluster():
-            return False
+        if not force:
+            stats = self.drift_stats()
+            tripped = (
+                stats["unassigned_frac"] > self.cfg.recluster_unassigned_frac
+                or stats["proto_shift"] > self.cfg.recluster_proto_shift)
+            if not tripped:
+                return False
+            obs.event("drift_trip", **stats)
         st = self._require_state()
         live = np.flatnonzero(np.asarray(st.valid))
         if len(live) < st.n_clusters:
@@ -816,19 +874,27 @@ class MembershipEngine:
         cengine = ClusterEngine(ClusterConfig(
             backend="numpy" if self.cfg.backend == "numpy" else "jnp",
             linkage=self.cfg.linkage))
-        fresh = np.asarray(cengine.labels(big_r, st.n_clusters))
-        matched = _match_labels(fresh, np.asarray(st.labels)[live],
-                                st.n_clusters)
-        lab_t = np.asarray(st.labels).copy()
-        lab_t[live] = matched
-        labels = jnp.asarray(lab_t) if self.on_device else lab_t
-        protos, counts = self._rebuild_protos(st.v, labels, st.valid,
-                                              st.n_clusters)
-        table, scales = self._quantize(protos)
+        with obs.span("membership.recluster", n_members=len(live)) as sp:
+            fresh = np.asarray(cengine.labels(big_r, st.n_clusters))
+            matched = _match_labels(fresh, np.asarray(st.labels)[live],
+                                    st.n_clusters)
+            lab_t = np.asarray(st.labels).copy()
+            lab_t[live] = matched
+            labels = jnp.asarray(lab_t) if self.on_device else lab_t
+            protos, counts = self._rebuild_protos(st.v, labels, st.valid,
+                                                  st.n_clusters)
+            table, scales = self._quantize(protos)
+            sp.sync((labels, table, counts))
         self.state = dataclasses.replace(
             st, labels=labels, protos=table, counts=counts,
             protos0=table, n_reclusters=st.n_reclusters + 1,
             proto_scales=scales, proto0_scales=scales)
+        if obs.enabled():
+            before = np.asarray(st.labels)[live]
+            obs.count("recluster_events")
+            obs.event("recluster", n_members=len(live), forced=bool(force),
+                      label_agreement=float((matched == before).mean()),
+                      n_reclusters=int(self.state.n_reclusters))
         return True
 
     def maybe_recluster(self) -> bool:

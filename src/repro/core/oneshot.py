@@ -20,6 +20,7 @@ from typing import Sequence
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core import clustering as clu
 from repro.core import similarity as sim
 from repro.core.cluster_engine import (ClusterConfig, ClusterEngine,
@@ -231,26 +232,28 @@ def one_shot_clustering(features: Sequence[np.ndarray] | jax.Array,
             cluster_cfg=(cluster_cfg if cluster_cfg is not None
                          else ClusterConfig(backend="jnp", linkage=linkage)),
             n_valid=n_valid, model_params=model_params)
-    engine = ProtocolEngine(cfg, mesh=mesh)
-    if feature_cfg is not None:
-        res = engine.run_raw(features, feature_cfg, n_valid=n_valid,
-                             probe=probe, signature_cfg=signature_cfg)
-    else:
-        res = engine.run(features, n_valid)
+    with obs.span("oneshot.run", n_clusters=n_clusters):
+        engine = ProtocolEngine(cfg, mesh=mesh)
+        if feature_cfg is not None:
+            res = engine.run_raw(features, feature_cfg, n_valid=n_valid,
+                                 probe=probe, signature_cfg=signature_cfg)
+        else:
+            res = engine.run(features, n_valid)
 
-    ccfg = cluster_cfg or ClusterConfig(linkage=linkage)
-    cengine = ClusterEngine(ccfg)
-    if cengine.on_device:
-        big_r, relevance = res.similarity, res.relevance
-    else:
-        big_r, relevance = (np.asarray(res.similarity),
-                            np.asarray(res.relevance))
-    dend = cengine.hac(big_r)
-    labels = cengine.cut(dend, n_clusters)
-    ledger = CommLedger(
-        n_users=res.n_users, d=res.d, top_k=res.top_k,
-        model_params=model_params,
-        mode="streaming" if engine.cfg.block_users else "broadcast")
+        ccfg = cluster_cfg or ClusterConfig(linkage=linkage)
+        cengine = ClusterEngine(ccfg)
+        if cengine.on_device:
+            big_r, relevance = res.similarity, res.relevance
+        else:
+            big_r, relevance = (np.asarray(res.similarity),
+                                np.asarray(res.relevance))
+        dend = cengine.hac(big_r)
+        labels = cengine.cut(dend, n_clusters)
+        ledger = CommLedger(
+            n_users=res.n_users, d=res.d, top_k=res.top_k,
+            model_params=model_params,
+            mode="streaming" if engine.cfg.block_users else "broadcast")
+    obs.record_ledger(ledger)
     return OneShotResult(labels=labels, similarity=big_r,
                          relevance=relevance, dendrogram=dend,
                          ledger=ledger, lam=res.lam, v=res.v)

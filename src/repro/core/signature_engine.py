@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import similarity as sim
 from repro.data import features as feat
 
@@ -342,6 +343,18 @@ class SignatureEngine:
         entirely inside the data (the zero-padded tail chunk, if any, is
         still masked — ``pca``'s affine Phi needs it).
         """
+        if isinstance(raw, jax.core.Tracer) or isinstance(
+                nv, jax.core.Tracer):
+            # inside a shard_map/jit trace: spans are host-side and would
+            # record trace time, not run time — instrument nothing here
+            return self._accumulate_grams(raw, nv, assume_full)
+        with obs.span("signature.accumulate_grams",
+                      n_users=raw.shape[0],
+                      backend=self.cfg.backend) as sp:
+            return sp.sync(self._accumulate_grams(raw, nv, assume_full))
+
+    def _accumulate_grams(self, raw, nv: jax.Array,
+                          assume_full: bool = False) -> jax.Array:
         n_users, n, m = raw.shape
         d_out = self.out_dim(m)
         params = self.params_for(m)
@@ -406,10 +419,13 @@ class SignatureEngine:
         relative residual norm and raises ``RuntimeError`` above
         ``cfg.resid_tol``.
         """
-        g = self.grams(raw, n_valid)
-        lam, v = topk_spectrum(g, top_k, method=self.cfg.eig,
-                               iters=self.cfg.subspace_iters,
-                               oversample=self.cfg.oversample)
+        with obs.span("signature.signatures", top_k=top_k,
+                      backend=self.cfg.backend) as sp:
+            g = self.grams(raw, n_valid)
+            lam, v = topk_spectrum(g, top_k, method=self.cfg.eig,
+                                   iters=self.cfg.subspace_iters,
+                                   oversample=self.cfg.oversample)
+            sp.sync((lam, v))
         if self.cfg.check if check is None else check:
             self.verify_convergence(subspace_residual(g, lam, v))
         return lam, v, g

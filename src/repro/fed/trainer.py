@@ -52,6 +52,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.fed import client as fed_client
 from repro.fed import hierarchy as hier
 from repro.fed import partition as part
@@ -387,16 +388,21 @@ def _train_fused(users, labels, models, eval_sets, cfg: MTHFLConfig,
             acc_hist[g, t] = models[t].accuracy(p_t, ex, ey)
 
     if cfg.scan_rounds:
-        losses, stacks = run_fn(p_stack, *args)
+        with obs.span("trainer.scan_rounds",
+                      rounds=cfg.global_rounds) as sp:
+            losses, stacks = run_fn(p_stack, *args)
+            sp.sync((losses, stacks))
         loss_hist[:] = np.asarray(losses)[:, :n_clusters]
         for g in range(cfg.global_rounds):
             eval_round(g, jax.tree.map(lambda l: l[g], stacks))
     else:
-        for g in range(cfg.global_rounds):
-            p_stack, loss = round_fn(p_stack, jnp.asarray(g, jnp.int32),
-                                     *args)
-            loss_hist[g] = np.asarray(loss)[:n_clusters]
-            eval_round(g, p_stack)
+        with obs.span("trainer.rounds", rounds=cfg.global_rounds) as sp:
+            for g in range(cfg.global_rounds):
+                p_stack, loss = round_fn(p_stack, jnp.asarray(g, jnp.int32),
+                                         *args)
+                loss_hist[g] = np.asarray(loss)[:n_clusters]
+                eval_round(g, p_stack)
+            sp.sync(p_stack)
 
     return MTHFLHistory(accuracy=acc_hist, train_loss=loss_hist,
                         labels=labels, fused=True)
@@ -522,8 +528,15 @@ def train_mthfl(users: Sequence,                      # list[UserData-like]
     else:
         use_fused = False
 
-    if use_fused:
-        return _train_fused(users, labels, models, eval_sets, cfg, setup,
-                            lps_params, mesh)
-    return _train_reference(users, labels, models, eval_sets, cfg, setup,
-                            lps_params)
+    with obs.span("trainer.train_mthfl", fused=use_fused,
+                  backend=cfg.backend, rounds=cfg.global_rounds):
+        if use_fused:
+            hist = _train_fused(users, labels, models, eval_sets, cfg,
+                                setup, lps_params, mesh)
+        else:
+            hist = _train_reference(users, labels, models, eval_sets, cfg,
+                                    setup, lps_params)
+    if obs.enabled():
+        obs.count("trainer.runs")
+        obs.count("trainer.global_rounds", cfg.global_rounds)
+    return hist

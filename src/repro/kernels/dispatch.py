@@ -21,8 +21,10 @@ from __future__ import annotations
 
 import jax
 
+from repro import obs
+
 __all__ = ["LOWERED_BACKENDS", "backend_kind", "supports_lowering",
-           "resolve_interpret", "device_kind"]
+           "resolve_interpret", "device_kind", "record_dispatch"]
 
 #: Platforms with a real Pallas lowering: TPU via Mosaic, GPU via Triton.
 LOWERED_BACKENDS = ("tpu", "gpu")
@@ -55,3 +57,21 @@ def device_kind() -> str:
     coarse platform name — a v4 and a v5e want different tiles.
     """
     return jax.devices()[0].device_kind
+
+
+def record_dispatch(kernel: str, blocks: dict | None = None) -> None:
+    """Telemetry tap for kernel dispatches (``tuning.get_blocks`` calls
+    this at tile-resolution time — host-side, before the jitted impl, so
+    the disabled path adds no work inside any jit boundary).
+
+    Feeds ``dispatch_count`` (stack-wide total), per-kernel
+    ``kernel_calls{kernel=..}`` counters, and a ``kernel_blocks`` gauge
+    holding the resolved tile plan id.
+    """
+    if not obs.enabled():
+        return
+    obs.count("dispatch_count")
+    obs.count("kernel_calls", kernel=kernel)
+    if blocks:
+        plan = ",".join(f"{k}={blocks[k]}" for k in sorted(blocks))
+        obs.gauge("kernel_blocks", plan, kernel=kernel)

@@ -203,6 +203,7 @@ def get_blocks(kernel: str, **dims: int) -> dict:
     hit = lookup(kernel, **dims)
     if hit:
         blocks.update(hit)
+    dispatch.record_dispatch(kernel, blocks)
     return blocks
 
 

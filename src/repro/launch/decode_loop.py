@@ -40,6 +40,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 PyTree = Any
 
 __all__ = ["DecodeStats", "greedy_decode", "ClusterHeads", "cluster_logits",
@@ -457,6 +459,19 @@ class ServeEngine:
         """Run every request to completion, admitting continuously as
         slots free up.  Returns per-request tokens + latencies and the
         counted dispatch/trace/utilization telemetry."""
+        with obs.span("serve.run", n_requests=len(requests),
+                      slots=self.cfg.slots):
+            stats = self._serve(requests)
+        if obs.enabled():
+            obs.count("serve.requests", len(stats.results))
+            obs.count("serve.prefill_dispatches", stats.prefill_dispatches)
+            obs.count("serve.decode_dispatches", stats.decode_dispatches)
+            obs.gauge("serve.slot_utilization", stats.slot_utilization)
+            for r in stats.results:
+                obs.observe("serve.ttft_us", r.ttft_s * 1e6)
+        return stats
+
+    def _serve(self, requests: Sequence[Request]) -> ServeStats:
         self._check(requests)
         scfg = self.cfg
         s_slots, w, p = scfg.slots, scfg.wave, scfg.max_prompt
@@ -503,6 +518,9 @@ class ServeEngine:
                     ttft[i] = now
                     if requests[i].gen == 1:
                         done[i] = now      # complete; never occupies a slot
+                        if obs.enabled():
+                            obs.event("request_done", request=i,
+                                      ttft_s=now, done_s=now, n_tokens=1)
                         continue
                     s = int(free[j])
                     slot_ids[j] = s
@@ -513,6 +531,10 @@ class ServeEngine:
                     cids[s] = requests[i].cluster
                 slot_state = self._admit(slot_state, wave_state,
                                          jnp.asarray(slot_ids))
+                if obs.enabled():
+                    obs.event("wave_admitted", round=rounds,
+                              n_admitted=len(take),
+                              free_slots=int((~active).sum()))
                 continue                   # admit again while possible
             if not active.any():
                 if not pending:
@@ -536,6 +558,12 @@ class ServeEngine:
                     done[i] = now
                     active[s] = False
                     slot_req[s] = -1
+                    if obs.enabled():
+                        obs.event("slot_freed", slot=int(s), request=i,
+                                  round=rounds)
+                        obs.event("request_done", request=i,
+                                  ttft_s=float(ttft[i]), done_s=now,
+                                  n_tokens=len(out_toks[i]))
                 else:
                     cur_tok[s] = nxt[s]
 

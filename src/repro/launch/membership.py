@@ -53,10 +53,11 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 import zlib
 
 import numpy as np
+
+from repro import obs
 
 SCENARIOS = ("clean", "label-noise", "byzantine", "drift")
 ARRIVAL_PATTERNS = ("steady", "bursty")
@@ -111,7 +112,7 @@ def run_cell(args, scenario: str, arrivals: str,
         from repro.core.hierarchy import HierarchyConfig
 
         hierarchy_cfg = HierarchyConfig(n_groups=args.seed_groups)
-    t0 = time.time()
+    t0 = obs.now()
     res = oneshot.one_shot_clustering(jnp.asarray(feats_all[seed_idx]),
                                       n_clusters=args.tasks, cfg=scfg,
                                       hierarchy_cfg=hierarchy_cfg)
@@ -122,7 +123,7 @@ def run_cell(args, scenario: str, arrivals: str,
         how = (f"hierarchical ({args.seed_groups} groups)"
                if args.seed_groups else "one-shot")
         print(f"seed: {args.seed_users} users, {how} protocol + HAC in "
-              f"{time.time() - t0:.2f}s, clustering accuracy "
+              f"{obs.now() - t0:.2f}s, clustering accuracy "
               f"{seed_acc:.1%}")
 
     # cluster id -> oracle task id (majority vote over the seed) and the
@@ -192,10 +193,10 @@ def run_cell(args, scenario: str, arrivals: str,
                 labels=cluster_of_task[np.minimum(wave_t,
                                                   args.tasks - 1)])
 
-        t0 = time.time()
+        t0 = obs.now()
         out = engine.assign(lam_w, v_w)
         labels = np.asarray(out.labels)
-        dt = time.time() - t0
+        dt = obs.now() - t0
         slots = engine.admit(lam_w, v_w, labels)
         live_slots.extend(int(s) for s in slots)
 
@@ -319,6 +320,9 @@ def main() -> None:
                     help="CI-sized run: 32 seed users, 3 waves of 8")
     ap.add_argument("--json", default=None,
                     help="write cell summaries to this path")
+    ap.add_argument("--events", default=None,
+                    help="record the obs event stream (admit/evict/"
+                         "assign-wave/drift-trip/recluster) to this JSONL")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -326,6 +330,10 @@ def main() -> None:
         args.seed_users, args.samples = 32, 16
         args.waves, args.wave_size, args.evict = 3, 8, 2
         args.drift_after = 1
+
+    if args.events:
+        obs.reset()
+        obs.enable()
 
     if args.matrix:
         cells = []
@@ -346,6 +354,11 @@ def main() -> None:
         with open(args.json, "w") as fh:
             json.dump(cells, fh, indent=2)
         print(f"wrote {len(cells)} cell(s) to {args.json}")
+
+    if args.events:
+        obs.save_events(args.events)
+        print(f"wrote {len(obs.events())} event(s) to {args.events}")
+        obs.disable()
 
 
 if __name__ == "__main__":

@@ -16,6 +16,7 @@ import argparse
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs.base import get_arch
 from repro.launch.decode_loop import (ClusterHeads, Request, ServeConfig,
                                       ServeEngine, cluster_logits_fn,
@@ -52,8 +53,15 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--events", default=None,
+                    help="record the obs event stream (wave_admitted/"
+                         "slot_freed/request_done) to this JSONL")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.events:
+        obs.reset()
+        obs.enable()
 
     cfg = get_arch(args.arch, reduced=bool(args.reduced))
     m = get_model(cfg)
@@ -71,8 +79,7 @@ def main() -> None:
     if args.mode == "static":
         # old path: pad everything to a uniform batch, per-token dispatch,
         # one cluster at a time
-        import time
-        t0 = time.perf_counter()
+        t0 = obs.now()
         for t in range(args.clusters):
             batch = [r for r in reqs if r.cluster == t]
             if not batch:
@@ -88,8 +95,12 @@ def main() -> None:
                   f"({stats.prefill_dispatches} dispatches) ttft "
                   f"{stats.ttft_s * 1e3:.1f}ms decode {stats.tok_per_s:.0f} "
                   f"tok/s")
-        wall = time.perf_counter() - t0
+        wall = obs.now() - t0
         print(f"static: {total_tok} tok (upper bound) in {wall:.2f}s")
+        if args.events:
+            obs.save_events(args.events)
+            print(f"wrote {len(obs.events())} event(s) to {args.events}")
+            obs.disable()
         return
 
     scfg = ServeConfig(slots=args.slots, wave=args.wave,
@@ -107,6 +118,11 @@ def main() -> None:
           f"({stats.prefill_scan_steps} scan chunks each), decode "
           f"dispatches {stats.decode_dispatches}, traces {stats.traces}")
     print("sample:", stats.results[0].tokens.tolist()[:24])
+
+    if args.events:
+        obs.save_events(args.events)
+        print(f"wrote {len(obs.events())} event(s) to {args.events}")
+        obs.disable()
 
 
 if __name__ == "__main__":

@@ -11,13 +11,12 @@ step function lowers at production scale.  On CPU use a REDUCED config
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import optim
+from repro import obs, optim
 from repro.checkpoint import restore_checkpoint, save_checkpoint, latest_step
 from repro.configs.base import get_arch
 from repro.data import tokens as tok
@@ -62,7 +61,7 @@ def main() -> None:
     spec = tok.TokenTaskSpec(vocab=min(cfg.vocab, 256), seed=0)
     it = tok.token_batch_iterator(spec, args.batch, args.seq, seed=1)
 
-    t0 = time.time()
+    t0 = obs.now()    # monotonic perf_counter — never time.time for rates
     for i in range(start, args.steps):
         raw = next(it)
         batch = {"tokens": jnp.asarray(raw["tokens"] % cfg.vocab),
@@ -79,9 +78,9 @@ def main() -> None:
                 jax.random.PRNGKey(i), (args.batch, args.seq, cfg.d_model))
         params, opt_state, loss = step_fn(params, opt_state, batch)
         if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
-            tps = args.batch * args.seq / max(time.time() - t0, 1e-9)
+            tps = args.batch * args.seq / max(obs.now() - t0, 1e-9)
             print(f"step {i:5d}  loss {float(loss):.4f}  ({tps:.0f} tok/s)")
-            t0 = time.time()
+            t0 = obs.now()
         if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
             save_checkpoint(args.ckpt_dir, i + 1, (params, opt_state))
     if args.ckpt_dir:

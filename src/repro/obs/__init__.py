@@ -1,0 +1,52 @@
+"""``repro.obs`` — zero-dependency observability: spans, metrics, events.
+
+Three pillars behind one module-level enable flag (off by default):
+
+  * **tracing** — nested ``span()`` context managers with
+    device-sync-aware timing, JSONL export, pretty trees, and optional
+    ``jax.profiler`` pass-through (``repro.obs.trace``);
+  * **metrics** — a process-global counter/gauge/histogram registry,
+    snapshotable and diffable, with a jit-cache-miss ``retrace_count``
+    hook and a ``CommLedger`` feed (``repro.obs.metrics``);
+  * **events** — a structured log of membership lifecycle and serving
+    scheduling events (``repro.obs.events``).
+
+Disabled-path contract: every instrumentation call is a function call +
+one flag check — no allocation, no locking, no registry mutation, and
+never any work inside a jit boundary (so the flag cannot retrace).
+
+    from repro import obs
+    obs.enable()
+    with obs.span("protocol.run") as sp:
+        labels = sp.sync(one_shot_clustering(...).labels)
+    print(obs.format_tree())
+    obs.save_trace("trace.jsonl"); obs.save_events("events.jsonl")
+"""
+from repro.obs.core import (configure, disable, enable, enabled, epoch,
+                            now, scope)
+from repro.obs.events import (clear_events, event, events, load_events,
+                              save_events)
+from repro.obs.metrics import (clear_metrics, count, counter_total,
+                               counter_value, diff, gauge, gauge_value,
+                               install_retrace_hook, load_snapshot, observe,
+                               record_ledger, save_snapshot, snapshot, stamp)
+from repro.obs.trace import (Span, clear_trace, format_tree, load_trace,
+                             profile_trace, save_trace, span, trace_records)
+
+__all__ = [
+    "enabled", "enable", "disable", "scope", "now", "epoch", "configure",
+    "span", "Span", "trace_records", "clear_trace", "save_trace",
+    "load_trace", "format_tree", "profile_trace",
+    "count", "gauge", "observe", "counter_value", "counter_total",
+    "gauge_value", "snapshot", "diff", "clear_metrics", "save_snapshot",
+    "load_snapshot", "record_ledger", "stamp", "install_retrace_hook",
+    "event", "events", "clear_events", "save_events", "load_events",
+    "reset",
+]
+
+
+def reset() -> None:
+    """Clear all three pillars (trace records, metrics, events)."""
+    clear_trace()
+    clear_metrics()
+    clear_events()

@@ -1,0 +1,371 @@
+"""Telemetry subsystem tests (ISSUE 10).
+
+The obs contract: spans nest and time monotonically (device-synced at
+exit), the metrics registry has exact counter/histogram semantics and
+mirrors ``CommLedger.summary()`` bit-for-bit, the event log round-trips
+through JSONL on the same timeline as the trace, and — the load-bearing
+half — the DISABLED path mutates nothing and never retraces a compiled
+program (the jit cache-miss hook sees zero new traces on warm calls).
+"""
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.membership_engine import MembershipConfig, MembershipEngine
+from repro.core.oneshot import CommLedger, one_shot_clustering
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Every test starts and ends with telemetry off and empty."""
+    obs.disable()
+    obs.reset()
+    yield
+    obs.disable()
+    obs.reset()
+
+
+# ---------------------------------------------------------------- spans
+
+class TestSpans:
+    def test_nesting_parent_child_depth(self):
+        with obs.scope(True):
+            with obs.span("outer", impl="dense") as outer:
+                with obs.span("inner") as inner:
+                    pass
+                with obs.span("inner2"):
+                    pass
+        recs = {r["name"]: r for r in obs.trace_records()}
+        assert set(recs) == {"outer", "inner", "inner2"}
+        assert recs["outer"]["parent"] == 0 and recs["outer"]["depth"] == 0
+        assert recs["inner"]["parent"] == recs["outer"]["id"]
+        assert recs["inner2"]["parent"] == recs["outer"]["id"]
+        assert recs["inner"]["depth"] == 1
+        assert recs["outer"]["meta"] == {"impl": "dense"}
+        del outer, inner
+
+    def test_timing_monotonic_and_contained(self):
+        with obs.scope(True):
+            with obs.span("outer"):
+                with obs.span("inner"):
+                    float(jnp.ones(64).sum())  # some real work
+        recs = {r["name"]: r for r in obs.trace_records()}
+        o, i = recs["outer"], recs["inner"]
+        assert o["dur_us"] >= 0 and i["dur_us"] >= 0
+        # child starts no earlier than parent and fits inside it
+        assert i["ts_us"] >= o["ts_us"]
+        assert i["ts_us"] + i["dur_us"] <= o["ts_us"] + o["dur_us"] + 1e-3
+        # records share one monotonic epoch: successive spans don't step back
+        with obs.scope(True):
+            with obs.span("later"):
+                pass
+        later = [r for r in obs.trace_records() if r["name"] == "later"][0]
+        assert later["ts_us"] >= o["ts_us"]
+
+    def test_sync_blocks_device_values(self):
+        with obs.scope(True):
+            with obs.span("compute") as sp:
+                out = sp.sync(jnp.ones((256, 256)) @ jnp.ones((256, 256)))
+        assert float(out[0, 0]) == 256.0
+        rec = obs.trace_records()[-1]
+        assert rec["name"] == "compute" and rec["dur_us"] > 0
+
+    def test_note_attaches_meta(self):
+        with obs.scope(True):
+            with obs.span("s") as sp:
+                sp.note(rounds=3, backend="jnp")
+        rec = obs.trace_records()[-1]
+        assert rec["meta"] == {"rounds": 3, "backend": "jnp"}
+
+    def test_threads_get_independent_stacks(self):
+        def worker():
+            with obs.span("worker.outer"):
+                with obs.span("worker.inner"):
+                    pass
+
+        with obs.scope(True):
+            with obs.span("main.outer"):
+                t = threading.Thread(target=worker, name="obs-worker")
+                t.start()
+                t.join()
+        recs = {r["name"]: r for r in obs.trace_records()}
+        # the thread's root span must NOT be parented under main.outer
+        assert recs["worker.outer"]["parent"] == 0
+        assert recs["worker.inner"]["parent"] == recs["worker.outer"]["id"]
+        assert recs["worker.outer"]["thread"] == "obs-worker"
+
+    def test_jsonl_round_trip_and_tree(self, tmp_path):
+        with obs.scope(True):
+            with obs.span("root", impl="x"):
+                with obs.span("leaf"):
+                    pass
+        p = obs.save_trace(tmp_path / "trace.jsonl")
+        loaded = obs.load_trace(p)
+        assert loaded == obs.trace_records()
+        tree = obs.format_tree(loaded)
+        root_line, leaf_line = tree.splitlines()
+        assert root_line.startswith("root") and "impl=x" in root_line
+        assert leaf_line.startswith("  leaf")     # indented under root
+
+    def test_format_tree_empty(self):
+        assert obs.format_tree([]) == "(no spans recorded)"
+
+
+# -------------------------------------------------------------- metrics
+
+class TestMetrics:
+    def test_counter_semantics(self):
+        with obs.scope(True):
+            obs.count("c")
+            obs.count("c", 4)
+            obs.count("c", kernel="assign")
+            obs.count("c", 2, kernel="assign")
+            obs.count("c", kernel="hac")
+        assert obs.counter_value("c") == 5
+        assert obs.counter_value("c", kernel="assign") == 3
+        assert obs.counter_value("c", kernel="hac") == 1
+        assert obs.counter_total("c") == 9
+
+    def test_gauge_last_value_wins(self):
+        with obs.scope(True):
+            obs.gauge("g", 1.5)
+            obs.gauge("g", jnp.asarray(2.5))   # device scalar coerced
+            obs.gauge("plan", "bm=32,bn=64", kernel="assign")
+        assert obs.gauge_value("g") == 2.5
+        assert isinstance(obs.gauge_value("g"), float)
+        assert obs.gauge_value("plan", kernel="assign") == "bm=32,bn=64"
+
+    def test_histogram_semantics(self):
+        with obs.scope(True):
+            for v in (0.5, 1.0, 3.0, 100.0):
+                obs.observe("h", v)
+        h = obs.snapshot()["histograms"]["h"]
+        assert h["count"] == 4
+        assert h["total"] == pytest.approx(104.5)
+        assert h["min"] == 0.5 and h["max"] == 100.0
+        assert h["mean"] == pytest.approx(104.5 / 4)
+        # pow-2 buckets: <=1 -> "1", 3 -> "4", 100 -> "128"
+        assert h["buckets"] == {"1": 2, "4": 1, "128": 1}
+
+    def test_snapshot_diff(self):
+        with obs.scope(True):
+            obs.count("a")
+            obs.gauge("g", 1)
+            before = obs.snapshot()
+            obs.count("a", 2)
+            obs.count("b")
+            obs.gauge("g", 7)
+            obs.observe("h", 10.0)
+            after = obs.snapshot()
+        d = obs.diff(before, after)
+        assert d["counters"] == {"a": 2, "b": 1}
+        assert d["gauges"] == {"g": [1, 7]}
+        assert d["histograms"] == {"h": {"count": 1, "total": 10.0}}
+        # identical snapshots diff to nothing
+        assert not any(obs.diff(after, after).values())
+
+    def test_snapshot_round_trip(self, tmp_path):
+        with obs.scope(True):
+            obs.count("a", 3)
+            obs.observe("h", 2.0)
+        p = obs.save_snapshot(tmp_path / "snap.json")
+        assert obs.load_snapshot(p) == obs.snapshot()
+
+    def test_ledger_parity_vs_summary(self):
+        """comm.* gauges mirror CommLedger.summary() exactly — the
+        telemetry view of the paper's communication-cost claim."""
+        ledger = CommLedger(n_users=40, d=16, top_k=6,
+                            model_params=10_000, mode="streaming")
+        with obs.scope(True):
+            obs.record_ledger(ledger)
+        s = ledger.summary()
+        for k, v in s.items():
+            if v is None:
+                continue
+            assert obs.gauge_value(f"comm.{k}") == v, k
+        assert (obs.gauge_value("comm_upload_bytes")
+                == s["per_user_upload_bytes"] * s["n_users"])
+
+    def test_ledger_none_fields_skipped(self):
+        ledger = CommLedger(n_users=8, d=4, top_k=2)  # model_params=0
+        assert ledger.summary()["oneshot_vs_iterative_ratio"] is None
+        with obs.scope(True):
+            obs.record_ledger(ledger)
+        assert obs.gauge_value("comm.oneshot_vs_iterative_ratio") is None
+
+
+# ------------------------------------------------------------- disabled
+
+class TestDisabledMode:
+    def test_span_is_shared_noop(self):
+        s1 = obs.span("a", impl="x")
+        s2 = obs.span("b")
+        assert s1 is s2                       # one shared object, no alloc
+        with s1 as sp:
+            v = sp.sync(jnp.ones(3))
+            sp.note(k=1)
+        assert v.shape == (3,)
+        assert obs.trace_records() == []
+
+    def test_zero_registry_mutation(self):
+        obs.count("c")
+        obs.gauge("g", 1)
+        obs.observe("h", 2.0)
+        obs.event("kind", x=1)
+        obs.record_ledger(CommLedger(n_users=4, d=2, top_k=1))
+        snap = obs.snapshot()
+        assert snap == {"counters": {}, "gauges": {}, "histograms": {}}
+        assert obs.events() == []
+
+    def test_scope_restores_prior_state(self):
+        assert not obs.enabled()
+        with obs.scope(True):
+            assert obs.enabled()
+            with obs.scope(False):
+                assert not obs.enabled()
+            assert obs.enabled()
+        assert not obs.enabled()
+
+    def test_toggling_never_retraces(self):
+        """The retrace guarantee: a function jitted with telemetry off is
+        NOT recompiled when telemetry turns on (and vice versa), because
+        the disabled path does no work inside jit boundaries."""
+        @jax.jit
+        def f(x):
+            return (x * 2).sum()
+
+        x = jnp.ones(17)                       # distinctive shape
+        f(x).block_until_ready()               # warm with obs off
+        with obs.scope(True):
+            before = obs.counter_value("retrace_count")
+            for _ in range(3):
+                f(x).block_until_ready()       # warm calls, obs on
+            assert obs.counter_value("retrace_count") == before
+            f(jnp.ones((17, 2))).block_until_ready()   # genuinely new shape
+            assert obs.counter_value("retrace_count") > before
+
+
+# --------------------------------------------------------------- events
+
+class TestEvents:
+    def test_order_and_fields(self):
+        with obs.scope(True):
+            obs.event("admit", n=3, slots=[0, 1, 2])
+            obs.event("evict", n=1)
+        evs = obs.events()
+        assert [e["kind"] for e in evs] == ["admit", "evict"]
+        assert evs[0]["seq"] < evs[1]["seq"]
+        assert evs[0]["t_us"] <= evs[1]["t_us"]
+        assert evs[0]["n"] == 3 and evs[0]["slots"] == [0, 1, 2]
+
+    def test_device_scalars_coerced(self):
+        with obs.scope(True):
+            obs.event("e", frac=jnp.asarray(0.25), n=np.int64(7))
+        e = obs.events("e")[0]
+        assert e["frac"] == 0.25 and isinstance(e["frac"], float)
+        assert e["n"] == 7 and isinstance(e["n"], int)
+        json.dumps(e)                          # JSON-able end to end
+
+    def test_kind_filter(self):
+        with obs.scope(True):
+            obs.event("a")
+            obs.event("b")
+            obs.event("a")
+        assert len(obs.events("a")) == 2
+        assert len(obs.events("b")) == 1
+
+    def test_jsonl_round_trip(self, tmp_path):
+        with obs.scope(True):
+            obs.event("admit", n=2)
+            obs.event("recluster", label_agreement=0.75)
+        p = obs.save_events(tmp_path / "events.jsonl")
+        assert obs.load_events(p) == obs.events()
+
+
+# --------------------------------------------- instrumented hot paths
+
+@pytest.fixture(scope="module")
+def oneshot_result():
+    rng = np.random.default_rng(0)
+    feats = [rng.normal(size=(24, 8)).astype(np.float32) for _ in range(12)]
+    return one_shot_clustering(feats, 2)
+
+
+class TestInstrumentation:
+    def test_pipeline_emits_all_three_pillars(self, oneshot_result):
+        obs.reset()
+        res = oneshot_result
+        with obs.scope(True):
+            eng = MembershipEngine.from_oneshot(
+                res, MembershipConfig(backend="jnp", capacity=32))
+            lam = np.asarray(res.lam)[:4]
+            v = np.asarray(res.v)[:4]
+            wave = eng.assign(lam, v)
+            eng.admit(lam, v, np.asarray(wave.labels))
+            eng.drift_stats()
+        names = {r["name"] for r in obs.trace_records()}
+        assert {"membership.assign", "membership.admit"} <= names
+        assert obs.counter_value("membership.assign_waves") == 1
+        assert obs.counter_value("membership.admits") == 4   # members
+        assert obs.gauge_value("directory_bytes") > 0
+        assert obs.gauge_value("unassigned_frac") is not None
+        snap = obs.snapshot()
+        assert snap["histograms"]["assign_latency_us"]["count"] == 1
+        kinds = [e["kind"] for e in obs.events()]
+        assert kinds == ["seed", "assign_wave", "admit"]
+        wave_ev = obs.events("assign_wave")[0]
+        assert wave_ev["n"] == 4
+
+    def test_oneshot_records_ledger_and_spans(self):
+        rng = np.random.default_rng(1)
+        feats = [rng.normal(size=(16, 6)).astype(np.float32)
+                 for _ in range(8)]
+        obs.reset()
+        with obs.scope(True):
+            res = one_shot_clustering(feats, 2)
+        names = {r["name"] for r in obs.trace_records()}
+        assert {"oneshot.run", "protocol.run", "cluster.hac"} <= names
+        assert (obs.gauge_value("comm.per_user_upload_bytes")
+                == res.ledger.summary()["per_user_upload_bytes"])
+
+    def test_tile_resolution_counts_dispatches(self):
+        from repro.kernels import tuning
+
+        with obs.scope(True):
+            blocks = tuning.get_blocks("assign", b=64, d2=96)
+            tuning.get_blocks("assign", b=64, d2=96)
+        assert blocks                          # a real tile plan came back
+        assert obs.counter_value("dispatch_count") == 2
+        assert obs.counter_value("kernel_calls", kernel="assign") == 2
+        assert obs.gauge_value("kernel_blocks",
+                               kernel="assign") is not None
+
+    def test_disabled_pipeline_identical_and_silent(self, oneshot_result):
+        """Same workload with telemetry off: same verdicts, empty obs."""
+        obs.reset()
+        res = oneshot_result
+        eng = MembershipEngine.from_oneshot(
+            res, MembershipConfig(backend="jnp", capacity=32))
+        lam = np.asarray(res.lam)[:4]
+        v = np.asarray(res.v)[:4]
+        wave = eng.assign(lam, v)
+        with obs.scope(True):
+            eng2 = MembershipEngine.from_oneshot(
+                res, MembershipConfig(backend="jnp", capacity=32))
+            wave2 = eng2.assign(lam, v)
+        np.testing.assert_array_equal(np.asarray(wave.labels),
+                                      np.asarray(wave2.labels))
+        # the disabled half left nothing behind but the enabled half did
+        assert any(r["name"] == "membership.assign"
+                   for r in obs.trace_records())
+        assert obs.counter_value("membership.assign_waves") == 1
+
+    def test_stamp_shape(self):
+        s = obs.stamp()
+        assert set(s) == {"obs_enabled", "dispatch_count", "retrace_count"}
+        assert s["obs_enabled"] is False
